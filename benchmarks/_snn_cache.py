@@ -1,0 +1,56 @@
+"""Shared SNN training cache for the accuracy benchmarks (Figs. 5b/6c/8,
+Table I): each (dataset, mode, train_nlq) model is trained once and memoized
+to disk so the benchmark suite doesn't retrain per figure."""
+
+from __future__ import annotations
+
+import os
+import pickle
+
+import jax
+
+from repro.data import events as ev_lib
+from repro.models import snn
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), ".cache")
+
+TRAIN_STEPS = int(os.environ.get("REPRO_SNN_TRAIN_STEPS", "350"))
+EVAL_BATCHES = int(os.environ.get("REPRO_SNN_EVAL_BATCHES", "6"))
+
+_KWN_K = {"nmnist": 3, "dvs_gesture": 12, "quiroga": 6}
+_ACT = {"nmnist": "quadratic", "dvs_gesture": "relu", "quiroga": "sigmoid4"}
+
+
+def snn_config(dataset: str, mode: str, train_nlq: bool = True) -> snn.SNNConfig:
+    d = ev_lib.DATASETS[dataset]
+    return snn.SNNConfig(
+        n_in=d.n_in, n_steps=d.n_steps, n_classes=d.n_classes,
+        mode=mode, k=_KWN_K[dataset], activation=_ACT[dataset],
+        train_nlq=train_nlq)
+
+
+def trained_model(dataset: str, mode: str, train_nlq: bool = True,
+                  seed: int = 0):
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    tag = f"{dataset}_{mode}_nlq{int(train_nlq)}_s{seed}_t{TRAIN_STEPS}"
+    path = os.path.join(CACHE_DIR, tag + ".pkl")
+    cfg = snn_config(dataset, mode, train_nlq)
+    ds = ev_lib.EventDataset(ev_lib.DATASETS[dataset])
+    if os.path.exists(path):
+        with open(path, "rb") as f:
+            p = pickle.load(f)
+        return p, cfg, ds
+    # per-cell training budget: the quadratic NLD cell degrades past ~350
+    # steps (ramp-knee gradient spikes), the relu NLD (dvs) keeps improving.
+    steps = TRAIN_STEPS
+    if mode == "nld" and dataset == "dvs_gesture":
+        steps = TRAIN_STEPS * 2
+    p, losses = snn.train(cfg, ds, n_steps=steps, batch=64, seed=seed, lr=0.1)
+    with open(path, "wb") as f:
+        pickle.dump(jax.tree.map(lambda x: __import__("numpy").asarray(x), p), f)
+    return p, cfg, ds
+
+
+def eval_model(p, cfg, ds, seed: int = 1, **kw):
+    return snn.evaluate(p, cfg, ds, jax.random.PRNGKey(seed),
+                        n_batches=EVAL_BATCHES, **kw)

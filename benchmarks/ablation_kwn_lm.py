@@ -1,0 +1,76 @@
+"""Beyond-paper ablation: the macro's mechanisms applied to LM training.
+
+Three questions the paper's ideas raise at LM scale, answered on a reduced
+smolLM/MoE config (CPU-runnable):
+  1. KWN-FFN — Eq. (1) winner sparsity on FFN hidden units: how much loss do
+     we give up at k = 12.5% / 25% of units vs dense?
+  2. CIM mode — ternary twin-cell weights + NLQ activations on every
+     projection (C1+C2): trainable? loss gap vs fp?
+  3. SNL router rescue — the sensitive-neuron probabilistic rescue (C5)
+     applied to MoE routing: does load balance (aux loss) improve?
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCHS
+from repro.configs.base import reduced
+from repro.data.synthetic_lm import DataConfig, SyntheticLM
+from repro.models import lm
+from repro.nn import module, moe
+from repro.train import optim, train_loop
+
+STEPS = 40
+
+
+def _train(cfg, seed=0, steps=STEPS):
+    ocfg = optim.AdamWConfig(lr=5e-3, warmup_steps=4, total_steps=steps)
+    params = module.materialize(lm.param_specs(cfg), jax.random.PRNGKey(seed))
+    opt = optim.adamw_init(params, ocfg)
+    data = SyntheticLM(DataConfig(cfg.vocab_size, 64, 8, seed=seed))
+    step = jax.jit(train_loop.build_train_step(cfg, None, n_micro=2,
+                                               opt_cfg=ocfg))
+    losses = []
+    for i in range(steps):
+        params, opt, m = step(params, opt, data.batch_at(i, n_micro=2))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+def run() -> dict:
+    base = reduced(ARCHS["smollm-135m"])
+    out = {}
+
+    dense = _train(base)
+    out["ffn_dense_final_loss"] = round(dense[-1], 4)
+    for k, tag in ((16, "kwn_ffn_k16(12.5%)"), (32, "kwn_ffn_k32(25%)")):
+        l = _train(dataclasses.replace(base, kwn_ffn_k=k))
+        out[f"{tag}_final_loss"] = round(l[-1], 4)
+        out[f"{tag}_gap_vs_dense"] = round(l[-1] - dense[-1], 4)
+
+    cim = _train(dataclasses.replace(base, cim_linear=True))
+    out["cim_mode_final_loss"] = round(cim[-1], 4)
+    out["cim_mode_gap_vs_dense"] = round(cim[-1] - dense[-1], 4)
+    out["cim_mode_trains"] = bool(cim[-1] < cim[0])
+
+    # SNL-style router rescue on a small MoE layer (direct measurement)
+    key = jax.random.PRNGKey(0)
+    d, e, kk, t = 32, 8, 2, 512
+    p = {
+        "router": jax.random.normal(key, (d, e)) * 0.5,
+        "w_in": jax.random.normal(jax.random.fold_in(key, 1), (e, d, 64)),
+        "w_gate": jax.random.normal(jax.random.fold_in(key, 2), (e, d, 64)),
+        "w_out": jax.random.normal(jax.random.fold_in(key, 3), (e, 64, d)),
+    }
+    x = jax.random.normal(jax.random.fold_in(key, 4), (1, t, d))
+    _, aux0 = moe.moe_ref(p, x, k=kk)
+    _, aux1 = moe.moe_ref(p, x, k=kk, snl_rescue=0.05,
+                          rng=jax.random.PRNGKey(7))
+    out["router_aux_balance_no_snl"] = round(float(aux0), 4)
+    out["router_aux_balance_snl"] = round(float(aux1), 4)
+    out["snl_improves_balance"] = bool(aux1 < aux0)
+    return out

@@ -1,0 +1,101 @@
+"""Roofline report: aggregates dryrun_results/*.json into the per-(arch x
+shape x mesh) table for EXPERIMENTS.md §Roofline — three terms, dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPs ratio, per-device memory."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "dryrun_results")
+
+
+def load_cells() -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(path) as f:
+            cells.append(json.load(f))
+    return cells
+
+
+def recompute_roofline(c: dict) -> dict:
+    """Recompute the analytical terms from the current flops model (the
+    compiled JSON keeps memory_analysis + HLO cross-checks; the analytical
+    model is versioned with the code so reports always use the latest)."""
+    from repro.configs import get_config
+    from repro.roofline import flops_model
+    cfg = get_config(c["arch"])
+    mesh = flops_model.mesh_for(c["mesh"] != "16x16")
+    return flops_model.analyze(
+        cfg, c["shape"], mesh, n_micro=c.get("n_micro", 1),
+        grad_bytes=2 if c.get("grad_dtype") == "bfloat16" else 4,
+        moment_bytes=2 if c.get("moment_dtype") == "bfloat16" else 4)
+
+
+def row(c: dict) -> dict:
+    try:
+        r = recompute_roofline(c)
+    except Exception:
+        r = c.get("roofline", {})
+    return {
+        "arch": c["arch"], "shape": c["shape"], "mesh": c["mesh"],
+        "compute_s": r.get("compute_s", 0.0),
+        "memory_s": r.get("memory_s", 0.0),
+        "collective_s": r.get("collective_s", 0.0),
+        "dominant": r.get("dominant", "?"),
+        "model_over_impl_flops": r.get("model_over_hlo", 0.0),
+        "roofline_frac": r.get("roofline_frac", 0.0),
+        "mem_gib_per_dev": c.get("bytes_per_device", 0) / 2 ** 30,
+        "fits_v5e_16g": c.get("bytes_per_device", 0) / 2 ** 30 <= 16.0,
+        "compile_s": c.get("compile_s", 0.0),
+    }
+
+
+def table_md(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | dominant "
+           "| useful/impl | roofline frac | GiB/dev | fits 16G |\n"
+           "|---|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['compute_s']:.4f} | {r['memory_s']:.4f} "
+            f"| {r['collective_s']:.4f} | **{r['dominant']}** "
+            f"| {r['model_over_impl_flops']:.2f} | {r['roofline_frac']:.2f} "
+            f"| {r['mem_gib_per_dev']:.2f} | {'Y' if r['fits_v5e_16g'] else 'N'} |")
+    return hdr + "\n".join(lines)
+
+
+def run() -> dict:
+    cells = load_cells()
+    rows = [row(c) for c in cells]
+    n_ok = len(rows)
+    doms = {}
+    for r in rows:
+        doms[r["dominant"]] = doms.get(r["dominant"], 0) + 1
+    worst = sorted((r for r in rows if r["mesh"] == "16x16"),
+                   key=lambda r: r["roofline_frac"])[:3]
+    most_coll = sorted((r for r in rows if r["mesh"] == "16x16"),
+                       key=lambda r: -(r["collective_s"]
+                                       / max(r["compute_s"] + r["memory_s"],
+                                             1e-12)))[:3]
+    return {
+        "n_cells_compiled": n_ok,
+        "dominant_histogram": doms,
+        "worst_roofline_frac": [
+            {k: r[k] for k in ("arch", "shape", "roofline_frac")}
+            for r in worst],
+        "most_collective_bound": [
+            {k: r[k] for k in ("arch", "shape", "collective_s")}
+            for r in most_coll],
+        "rows": rows,
+    }
+
+
+def write_markdown(path: str):
+    cells = load_cells()
+    rows = [row(c) for c in cells]
+    with open(path, "w") as f:
+        f.write(table_md(rows))
+    return path

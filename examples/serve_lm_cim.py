@@ -1,0 +1,22 @@
+"""End-to-end serving driver (the paper's kind: inference efficiency):
+batched requests through a smolLM-architecture model, comparing standard
+execution vs NeuDW-CIM mode (ternary twin-cell weights + NLQ activations on
+every projection).
+
+    PYTHONPATH=src python examples/serve_lm_cim.py
+"""
+
+from repro.launch import serve
+
+
+def main():
+    print("== standard execution ==")
+    serve.main(["--arch", "smollm-135m", "--smoke", "--requests", "6",
+                "--slots", "3", "--max-new", "8"])
+    print("\n== NeuDW-CIM mode (ternary weights + NLQ activations) ==")
+    serve.main(["--arch", "smollm-135m", "--smoke", "--requests", "6",
+                "--slots", "3", "--max-new", "8", "--cim"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""NeuDW-CIM core: the paper's contribution as composable JAX modules.
+
+ternary   — twin 9T bit-cell ternary quantization + multi-VDD composition (C1)
+ima       — reconfigurable nonlinear in-memory ADC: NLQ / NL activation (C2)
+kwn       — top-K winner selection with ramp early stop (C3)
+dendrite  — nonlinear dendrites, Eq. (2) (C4)
+lif       — digital LIF + SNL + PRBS noise, Eq. (1) (C5)
+prbs      — LFSR noise generator
+macro     — 256x128 macro simulator + virtual macro-grid tiling
+energy    — calibrated energy/latency model (Fig. 9, Table I)
+"""
+
+from repro.core import dendrite, energy, ima, kwn, lif, macro, prbs, ternary  # noqa: F401

@@ -1,0 +1,82 @@
+"""Nonlinear dendrites — NLD mode (paper C4, Eq. 2, Fig. 1c).
+
+Each output neuron p owns J dendritic branches; branch j computes a sparse
+synaptic MAC passed through the NL-IMA activation f(), then the soma combines
+branches with dendritic weights W^d:
+
+    V_mem^p(t+1) = sum_j W^d_{j,p} f( sum_i W^s_{i,j,p} S_i ) + beta V_mem^p(t)
+
+"Owing to the inherent sparsity of the connections, this enhancement is
+achieved without increasing the total parameter overhead": each branch sees
+only a subset of inputs.  We realize that with a fixed (hash-based) binary
+connectivity mask so total synapse count matches a dense single-stage layer.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ima as ima_lib
+
+
+class DendriteParams(NamedTuple):
+    w_syn: jax.Array    # (J, I, N) synaptic weights (masked sparse)
+    w_dend: jax.Array   # (J, N) dendritic combine weights
+    mask: jax.Array     # (J, I, N) fixed 0/1 connectivity
+
+
+def dendrite_init(key: jax.Array, n_in: int, n_out: int, n_branches: int,
+                  fanin_frac: float | None = None,
+                  gain: float = 8.0) -> DendriteParams:
+    """Sparse branch connectivity keeping total synapses == n_in * n_out.
+
+    Default fan-in fraction 1/J so J branches together cost the same as one
+    dense layer (paper: no parameter overhead).  ``gain`` scales w_syn so
+    branch MACs land in the NL-IMA's useful range for *sparse event* inputs
+    (a few % spike rate): without it the quadratic dendrite squashes
+    near-zero MACs to nothing and the soma never fires.
+    """
+    if fanin_frac is None:
+        fanin_frac = 1.0 / n_branches
+    k1, k2, k3 = jax.random.split(key, 3)
+    mask = (jax.random.uniform(k1, (n_branches, n_in, n_out)) < fanin_frac)
+    mask = mask.astype(jnp.float32)
+    fan_in = max(1.0, n_in * fanin_frac)
+    w_syn = gain * jax.random.normal(k2, (n_branches, n_in, n_out)) \
+        / jnp.sqrt(fan_in)
+    w_dend = jax.random.normal(k3, (n_branches, n_out)) / jnp.sqrt(float(n_branches))
+    return DendriteParams(w_syn * mask, w_dend, mask)
+
+
+def dendrite_mac(params: DendriteParams, spikes: jax.Array,
+                 f: Callable[[jax.Array], jax.Array] | None = None,
+                 nl_cb: ima_lib.RampCodebook | None = None,
+                 quantize: bool = False) -> jax.Array:
+    """Eq. (2) drive term: sum_j W^d_j f(branch_mac_j).
+
+    spikes: (..., I) ternary inputs.
+    f:      ideal activation (training path);
+    nl_cb:  NL-IMA codebook — when given with ``quantize=True`` the branch MACs
+            go through the quantized ramp (silicon inference path).
+    """
+    w = params.w_syn * params.mask
+    # branch MACs: (..., J, N)
+    mac = jnp.einsum("...i,jin->...jn", spikes, w)
+    if quantize and nl_cb is not None:
+        if f is not None:
+            # STE around the true activation: forward = quantized NL-IMA,
+            # backward = f'(mac) (much better-conditioned than a straight
+            # pass-through for training the dendrites).
+            act_f = f(mac)
+            act = act_f + jax.lax.stop_gradient(
+                ima_lib.ima_quantize(mac, nl_cb) - act_f)
+        else:
+            act = ima_lib.ima_quantize_ste(mac, nl_cb)
+    elif f is not None:
+        act = f(mac)
+    else:
+        act = mac
+    return jnp.einsum("...jn,jn->...n", act, params.w_dend)

@@ -1,0 +1,173 @@
+"""Calibrated analytical energy/latency model (paper Fig. 9, Table I).
+
+The analog physics (bit-line discharge, multi-VDD rails, ramp ADC cycles,
+serial digital LIF) exists on TPU only as a *model*.  Component energies are
+calibrated at VDD_ref = 0.7 V so the model reproduces the paper's measured
+numbers:
+
+  KWN  K=3  (N-MNIST)      0.8 pJ/SOP      KWN  K=12 (DVS Gesture)  1.5 pJ/SOP
+  NLD  N-MNIST 1.8 / DVS Gesture 2.3 / Quiroga 2.1 pJ/SOP
+  KWN control logic = 16.8 % of total power
+  ADC early-stop saving ~30 % (K=12, DVS);  LIF 10x (K=12 of 128)
+  1.6x EE improvement over the 1.3 pJ/SOP SOTA [9]
+
+Dynamic energy scales ~VDD^2 (Fig. 9b).  All energies in pJ, VDD in volts.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+MACRO_ROWS, MACRO_COLS = 256, 128
+VDD_REF = 0.7
+N_RAMP_STEPS = 31          # 5-bit IMA: 2^5 - 1 ramp steps
+CTRL_FRAC_KWN = 0.168      # KWN early-stop control logic share of total power
+
+# --- calibrated component energies at VDD_REF (pJ) -------------------------
+E_MAC_PER_SOP = 0.5                    # analog twin-cell MAC per active SOP
+E_ADC_PER_STEP_COL = 0.08              # linear/NLQ ramp: per step, per column
+E_LIF_PER_UPDATE = 1.0                 # digital 12-bit LIF pipeline per neuron
+E_ADC_NL_PER_STEP_COL = {              # NL-activation ramps (pulse-width mod.)
+    "quadratic": 0.139,                # N-MNIST NLD activation
+    "relu": 0.0549,                    # DVS Gesture NLD activation
+    "sigmoid4": 0.100,                 # Quiroga NLD activation
+}
+N_DENDRITE_BRANCHES = 2                # J conversions per output in NLD mode
+
+# --- calibrated dataset statistics (input spike rate on the macro) ---------
+SPIKE_RATES = {
+    "nmnist": 0.0289,
+    "dvs_gesture": 0.0096,
+    "quiroga": 0.0176,
+}
+NLD_ACTIVATION = {
+    "nmnist": "quadratic",
+    "dvs_gesture": "relu",
+    "quiroga": "sigmoid4",
+}
+KWN_K = {"nmnist": 3, "dvs_gesture": 12}
+
+
+def vdd_scale(vdd: float) -> float:
+    return (vdd / VDD_REF) ** 2
+
+
+def early_stop_saving(k: int) -> float:
+    """Fraction of ramp steps saved by Stop_ADC after the K-th crossing.
+
+    Linear fit through the two calibration points implied by the measured
+    energies (K=3 -> 51.6 %, K=12 -> 30 % = the paper's DVS Gesture claim).
+    """
+    return max(0.0, 0.588 - 0.024 * k)
+
+
+def adc_steps_early_stop(k: int) -> float:
+    return N_RAMP_STEPS * (1.0 - early_stop_saving(k))
+
+
+class EnergyBreakdown(NamedTuple):
+    mac: float
+    adc: float
+    lif: float
+    control: float
+
+    @property
+    def total(self) -> float:
+        return self.mac + self.adc + self.lif + self.control
+
+    def as_dict(self) -> dict:
+        t = self.total
+        return {
+            "mac_pj": self.mac, "adc_pj": self.adc, "lif_pj": self.lif,
+            "control_pj": self.control, "total_pj": t,
+            "frac": {"mac": self.mac / t, "adc": self.adc / t,
+                     "lif": self.lif / t, "control": self.control / t},
+        }
+
+
+def sops_per_step(spike_rate: float) -> float:
+    """Active synaptic operations per macro time step."""
+    return spike_rate * MACRO_ROWS * MACRO_COLS
+
+
+def kwn_step_energy(k: int, spike_rate: float, vdd: float = VDD_REF) -> EnergyBreakdown:
+    """Energy of one macro time step in KWN mode (all 128 columns)."""
+    s = vdd_scale(vdd)
+    e_mac = sops_per_step(spike_rate) * E_MAC_PER_SOP * s
+    e_adc = MACRO_COLS * adc_steps_early_stop(k) * E_ADC_PER_STEP_COL * s
+    e_lif = k * E_LIF_PER_UPDATE * s
+    parts = e_mac + e_adc + e_lif
+    e_ctrl = parts * CTRL_FRAC_KWN / (1.0 - CTRL_FRAC_KWN)
+    return EnergyBreakdown(e_mac, e_adc, e_lif, e_ctrl)
+
+
+def nld_step_energy(spike_rate: float, activation: str,
+                    vdd: float = VDD_REF) -> EnergyBreakdown:
+    """Energy of one macro time step in NLD mode (full conversion, dense LIF)."""
+    s = vdd_scale(vdd)
+    e_mac = sops_per_step(spike_rate) * E_MAC_PER_SOP * s
+    e_adc = (N_DENDRITE_BRANCHES * MACRO_COLS * N_RAMP_STEPS
+             * E_ADC_NL_PER_STEP_COL[activation] * s)
+    e_lif = MACRO_COLS * E_LIF_PER_UPDATE * s
+    return EnergyBreakdown(e_mac, e_adc, e_lif, 0.0)
+
+
+def kwn_pj_per_sop(k: int, spike_rate: float, vdd: float = VDD_REF) -> float:
+    return kwn_step_energy(k, spike_rate, vdd).total / sops_per_step(spike_rate)
+
+
+def nld_pj_per_sop(spike_rate: float, activation: str,
+                   vdd: float = VDD_REF) -> float:
+    return (nld_step_energy(spike_rate, activation, vdd).total
+            / sops_per_step(spike_rate))
+
+
+# ---------------------------------------------------------------------------
+# Paper-table reproductions
+# ---------------------------------------------------------------------------
+
+def table1_energy_entries(vdd: float = VDD_REF) -> dict:
+    """The Table I EE cells this model must reproduce."""
+    return {
+        "kwn_nmnist_pj_per_sop": kwn_pj_per_sop(3, SPIKE_RATES["nmnist"], vdd),
+        "kwn_dvs_pj_per_sop": kwn_pj_per_sop(12, SPIKE_RATES["dvs_gesture"], vdd),
+        "nld_nmnist_pj_per_sop": nld_pj_per_sop(
+            SPIKE_RATES["nmnist"], NLD_ACTIVATION["nmnist"], vdd),
+        "nld_dvs_pj_per_sop": nld_pj_per_sop(
+            SPIKE_RATES["dvs_gesture"], NLD_ACTIVATION["dvs_gesture"], vdd),
+        "nld_quiroga_pj_per_sop": nld_pj_per_sop(
+            SPIKE_RATES["quiroga"], NLD_ACTIVATION["quiroga"], vdd),
+    }
+
+
+def improvement_vs_sota(sota_pj_per_sop: float = 1.3) -> float:
+    """1.6x claim vs NeuC-CIM [9] (1.3 pJ/SOP)."""
+    best = kwn_pj_per_sop(3, SPIKE_RATES["nmnist"], VDD_REF)
+    return sota_pj_per_sop / best
+
+
+def ee_vs_vdd(vdds=(0.7, 0.8, 0.9, 1.0)) -> dict:
+    """Fig. 9b: EE across supply voltages for the two headline points."""
+    return {
+        f"{v:.1f}V": {
+            "kwn_k3_nmnist": kwn_pj_per_sop(3, SPIKE_RATES["nmnist"], v),
+            "kwn_k12_dvs": kwn_pj_per_sop(12, SPIKE_RATES["dvs_gesture"], v),
+        }
+        for v in vdds
+    }
+
+
+def lif_latency_speedup(k: int = 12, n: int = MACRO_COLS) -> float:
+    return n / float(k)
+
+
+def modeled_power_mw(mode: str, dataset: str, step_rate_hz: float,
+                     vdd: float = VDD_REF) -> float:
+    """Average power at a macro step rate (duty-cycled, paper: 0.22/0.17 mW)."""
+    if mode == "kwn":
+        e = kwn_step_energy(KWN_K[dataset], SPIKE_RATES[dataset], vdd).total
+    else:
+        e = nld_step_energy(SPIKE_RATES[dataset],
+                            NLD_ACTIVATION[dataset], vdd).total
+    return e * 1e-12 * step_rate_hz * 1e3

@@ -1,0 +1,233 @@
+"""Reconfigurable nonlinear In-Memory ADC (paper C2, Figs. 6/7).
+
+The silicon IMA is a 46x128 SRAM array that builds a differential *ramp* on the
+read bit-lines: rows are turned on sequentially until the ramp crosses the MAC
+result stored on the RBL; the crossing step index (ripple-counter value) is the
+digital code.  Two reconfigurations:
+
+  * **NLQ** (KWN mode): variable pulse width per row makes the ramp nonlinear,
+    so a 5-bit code spans an 8-bit input range with fine resolution where MAC
+    values are dense.  Codes are mapped back to 8-bit values with a LUT.
+  * **NL activation** (NLD mode): the ramp directly realizes y = f(x) (e.g.
+    y = 0.5 x^2, Fig. 7b) by modulating the pulse width of each quantization
+    step -> the counter output *is* f(x) quantized.
+
+TPU adaptation: a ramp comparison against monotone level boundaries is exactly
+``searchsorted`` against a codebook.  We implement the codebooks, the
+quantize/dequantize pair, the INL/noise model matching the measured silicon
+(mu = 0.41 LSB, sigma = 1.34 LSB for NLQ; INL 0.91 LSB for NL activation), and
+differentiable (STE) variants for QAT.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class RampCodebook(NamedTuple):
+    """Monotone ramp description.
+
+    levels:     (2^code_bits,) reconstruction values (LUT in KWN mode).
+    boundaries: (2^code_bits - 1,) decision thresholds between codes.
+    in_range:   (lo, hi) full-scale analog input range.
+    """
+
+    levels: jax.Array
+    boundaries: jax.Array
+    in_lo: float
+    in_hi: float
+
+    @property
+    def n_codes(self) -> int:
+        return int(self.levels.shape[0])
+
+
+def linear_codebook(code_bits: int, in_lo: float, in_hi: float) -> RampCodebook:
+    """Uniform ramp: the IMA's default linear-ADC configuration."""
+    n = 2 ** code_bits
+    levels = jnp.linspace(in_lo, in_hi, n)
+    boundaries = 0.5 * (levels[1:] + levels[:-1])
+    return RampCodebook(levels, boundaries, float(in_lo), float(in_hi))
+
+
+def nlq_codebook(code_bits: int, in_lo: float, in_hi: float,
+                 gamma: float = 2.0) -> RampCodebook:
+    """Nonlinear quantization codebook (Fig. 6b).
+
+    MAC distributions are zero-peaked, so NLQ spends codes densely near zero
+    and sparsely at the tails — a mu-law-like companding ramp realized on
+    silicon by shrinking the pulse width of early rows.  ``gamma`` controls
+    companding strength; gamma=2 gives the 5-bit-covers-8-bit-range behaviour
+    the paper uses (each NLQ code maps back to an 8-bit LUT value).
+    """
+    n = 2 ** code_bits
+    # Symmetric companding on [-1, 1] then affine to [in_lo, in_hi].
+    u = jnp.linspace(-1.0, 1.0, n)
+    comp = jnp.sign(u) * (jnp.abs(u) ** gamma)
+    mid, half = (in_hi + in_lo) / 2.0, (in_hi - in_lo) / 2.0
+    levels = mid + half * comp
+    boundaries = 0.5 * (levels[1:] + levels[:-1])
+    return RampCodebook(levels, boundaries, float(in_lo), float(in_hi))
+
+
+def activation_codebook(code_bits: int, f: Callable[[jax.Array], jax.Array],
+                        in_lo: float, in_hi: float) -> RampCodebook:
+    """NL-activation ramp: counter output approximates f(x) (Fig. 6a, NLD).
+
+    The ramp still *decides* on uniform input steps (row index <-> input
+    level), but the per-step pulse-width modulation makes the accumulated
+    counter value equal f(level) — i.e. reconstruction levels are f(x_i).
+    """
+    n = 2 ** code_bits
+    xs = jnp.linspace(in_lo, in_hi, n)
+    boundaries = 0.5 * (xs[1:] + xs[:-1])
+    return RampCodebook(f(xs), boundaries, float(in_lo), float(in_hi))
+
+
+# ---------------------------------------------------------------------------
+# Convert / reconstruct
+# ---------------------------------------------------------------------------
+
+def ima_convert(x: jax.Array, cb: RampCodebook) -> jax.Array:
+    """Ramp conversion: analog value -> integer code (ripple-counter value)."""
+    return jnp.searchsorted(cb.boundaries, x).astype(jnp.int32)
+
+
+def ima_reconstruct(code: jax.Array, cb: RampCodebook) -> jax.Array:
+    """LUT map-back (8-bit value in KWN mode; f(x) sample in NLD mode)."""
+    return jnp.take(cb.levels, jnp.clip(code, 0, cb.n_codes - 1))
+
+
+def ima_quantize(x: jax.Array, cb: RampCodebook) -> jax.Array:
+    """convert + reconstruct in one go (the value the digital LIF receives)."""
+    return ima_reconstruct(ima_convert(x, cb), cb)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def _ima_ste(x: jax.Array, levels: jax.Array, boundaries: jax.Array) -> jax.Array:
+    code = jnp.searchsorted(boundaries, x)
+    return jnp.take(levels, code)
+
+
+def _ima_ste_fwd(x, levels, boundaries):
+    return _ima_ste(x, levels, boundaries), (x, levels)
+
+
+def _ima_ste_bwd(res, g):
+    x, levels = res
+    lo, hi = levels[0], levels[-1]
+    # Straight-through inside range (the ramp saturates outside full scale).
+    mask = ((x >= jnp.minimum(lo, hi) - 0.5) & (x <= jnp.maximum(lo, hi) + 0.5))
+    return g * mask.astype(g.dtype), jnp.zeros_like(levels), None
+
+
+_ima_ste.defvjp(_ima_ste_fwd, _ima_ste_bwd)
+
+
+def ima_quantize_ste(x: jax.Array, cb: RampCodebook) -> jax.Array:
+    """Differentiable fake-quant through the IMA (used for NLQ-aware training,
+    the paper's Fig. 6c 'NLQ used in training' experiment)."""
+    return _ima_ste(x, cb.levels, cb.boundaries)
+
+
+# ---------------------------------------------------------------------------
+# Silicon error model (Fig. 7)
+# ---------------------------------------------------------------------------
+
+class IMANoiseModel(NamedTuple):
+    """Injected non-idealities, in LSB units of the codebook.
+
+    The *injection* constants below are calibrated so the *measured* statistics
+    (via ``measure_transfer_error`` / ``measure_inl``, which include rounding
+    interactions exactly like the silicon measurement does) reproduce the
+    paper's Fig. 7: mean error 0.41 LSB, sigma 1.34 LSB, activation INL 0.91 LSB.
+    """
+
+    offset_lsb: float = 0.45   # -> measured mu  ~ 0.41 LSB (Fig. 7a)
+    sigma_lsb: float = 1.35    # -> measured sig ~ 1.34 LSB (Fig. 7a)
+    inl_lsb: float = 0.56      # -> measured INL ~ 0.91 LSB (Fig. 7b)
+
+
+def lsb_size(cb: RampCodebook) -> jax.Array:
+    return (cb.in_hi - cb.in_lo) / (cb.n_codes - 1)
+
+
+def ima_convert_noisy(x: jax.Array, cb: RampCodebook, key: jax.Array,
+                      noise: IMANoiseModel = IMANoiseModel()) -> jax.Array:
+    """Conversion including comparator offset + thermal noise.
+
+    The paper measures the error *in code LSBs* (Fig. 7a: mu=0.41, sigma=1.34)
+    — i.e. the ripple-counter value deviates by whole steps — so we model it in
+    code space: a deterministic INL profile (slow sinusoid over the ramp, peak
+    ``inl_lsb``, the pulse-width systematic) plus offset and Gaussian noise.
+    """
+    ideal = ima_convert(x, cb).astype(jnp.float32)
+    u = (x - cb.in_lo) / (cb.in_hi - cb.in_lo + 1e-9)
+    inl = noise.inl_lsb * jnp.sin(2.0 * jnp.pi * u)
+    eps = noise.offset_lsb + noise.sigma_lsb * jax.random.normal(key, x.shape)
+    code = jnp.round(ideal + inl + eps).astype(jnp.int32)
+    return jnp.clip(code, 0, cb.n_codes - 1)
+
+
+def measure_transfer_error(cb: RampCodebook, key: jax.Array,
+                           noise: IMANoiseModel = IMANoiseModel(),
+                           n_points: int = 4096) -> dict:
+    """Monte-Carlo the silicon measurement of Fig. 7a: sweep the input range,
+    convert with noise, compare against the ideal code; report mu/sigma in LSB.
+    """
+    xs = jnp.linspace(cb.in_lo, cb.in_hi, n_points)
+    ideal = ima_convert(xs, cb)
+    noisy = ima_convert_noisy(xs, cb, key, noise)
+    err = (noisy - ideal).astype(jnp.float32)
+    return {"mean_lsb": float(jnp.mean(err)), "std_lsb": float(jnp.std(err))}
+
+
+def measure_inl(cb: RampCodebook, f: Callable[[jax.Array], jax.Array],
+                n_points: int = 4096, key: jax.Array | None = None,
+                noise: "IMANoiseModel | None" = None) -> float:
+    """Average INL of the NL-activation ramp vs the ideal curve (Fig. 7b),
+    in LSB of the *output* range.
+
+    With ``noise`` given, includes the silicon's systematic pulse-width error
+    (this is what the paper's 0.91 LSB measurement contains); without, it is
+    the ideal-emulation INL (quantization only).
+    """
+    xs = jnp.linspace(cb.in_lo, cb.in_hi, n_points)
+    if noise is not None and key is not None:
+        codes = ima_convert_noisy(xs, cb, key,
+                                  IMANoiseModel(0.0, noise.sigma_lsb * 0.0,
+                                                noise.inl_lsb))
+        y_hat = ima_reconstruct(codes, cb)
+    else:
+        y_hat = ima_quantize(xs, cb)
+    y = f(xs)
+    out_lsb = (jnp.max(cb.levels) - jnp.min(cb.levels)) / (cb.n_codes - 1)
+    inl = jnp.abs(y_hat - y) / jnp.maximum(out_lsb, 1e-9)
+    return float(jnp.mean(inl))
+
+
+# Convenience activations the NLD experiments use --------------------------------
+
+def quadratic(x: jax.Array) -> jax.Array:
+    """y = 0.5 x^2 — the measured Fig. 7b activation."""
+    return 0.5 * x * x
+
+
+def relu(x: jax.Array) -> jax.Array:
+    return jnp.maximum(x, 0.0)
+
+
+def sigmoid4(x: jax.Array) -> jax.Array:
+    """Saturating dendritic nonlinearity."""
+    return 4.0 * jax.nn.sigmoid(x)
+
+
+DENDRITE_ACTIVATIONS: dict[str, Callable[[jax.Array], jax.Array]] = {
+    "quadratic": quadratic,
+    "relu": relu,
+    "sigmoid4": sigmoid4,
+}

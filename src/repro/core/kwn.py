@@ -1,0 +1,125 @@
+"""Top-K Winner (KWN) selection with ramp early stop (paper C3, Fig. 4, Eq. 1).
+
+Silicon behaviour: after the MAC settles on the RBLs, the IMA sweeps a
+*descending* ramp; the largest MAC values cross first.  A priority encoder
+records (column index j, counter value Z_j) at each crossing; after the K-th
+crossing the controller asserts Stop_ADC — the remaining 128-K columns are
+never converted.  Only the K winners' V_mem are updated by the digital LIF.
+
+TPU adaptation: we provide
+  * ``kwn_select`` — exact top-K (jax.lax.top_k fast path) returning the same
+    (indices, codes, mask) the silicon registers would hold;
+  * ``kwn_ramp_scan`` — the literal descending threshold scan, used by the
+    latency model (its step count *is* the ADC cycle count with early stop)
+    and by the Pallas kernel's reference semantics;
+  * latency accounting that reproduces the −30 % ADC and 10× LIF claims.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.ima import RampCodebook, ima_convert
+
+
+class KWNResult(NamedTuple):
+    indices: jax.Array   # (..., K) winner column indices (PENC outputs)
+    codes: jax.Array     # (..., K) quantized MAC codes Z_j for the winners
+    mask: jax.Array      # (..., N) 1.0 where the column won, else 0.0
+    adc_steps: jax.Array # (...,) ramp steps until the K-th crossing (early stop)
+
+
+def kwn_select(mac: jax.Array, k: int, cb: RampCodebook) -> KWNResult:
+    """Exact top-K with ramp-consistent codes.
+
+    Ties are broken by column index (lower index wins), matching the priority
+    encoder.  ``adc_steps`` is derived from the K-th largest code: a descending
+    ramp starting at the top code reaches it after (n_codes - 1 - code_k) steps.
+    """
+    n = mac.shape[-1]
+    codes_all = ima_convert(mac, cb)
+    # The ramp ranks columns by *quantized code* (crossing step), ties broken
+    # by the priority encoder in index order — rank on exactly that.
+    tie = jnp.arange(n, dtype=jnp.float32) * (0.5 / n)
+    vals, idx = jax.lax.top_k(codes_all.astype(jnp.float32) - tie, k)
+    codes = jnp.take_along_axis(codes_all, idx, axis=-1)
+    mask = _scatter_mask(idx, n, mac.dtype)
+    kth_code = codes[..., -1]
+    adc_steps = (cb.n_codes - 1 - kth_code).astype(jnp.int32)
+    return KWNResult(idx, codes, mask, adc_steps)
+
+
+def _scatter_mask(idx: jax.Array, n: int, dtype) -> jax.Array:
+    """One-hot union over the last axis for batched idx (..., K) -> (..., N)."""
+    onehot = jax.nn.one_hot(idx, n, dtype=dtype)  # (..., K, N)
+    return jnp.clip(jnp.sum(onehot, axis=-2), 0.0, 1.0)
+
+
+def kwn_ramp_scan(mac: jax.Array, k: int, cb: RampCodebook) -> KWNResult:
+    """Literal descending-ramp emulation (the hardware algorithm).
+
+    Scans codes from high to low; a column 'crosses' at the step where the ramp
+    level drops below its MAC value.  Stops (functionally: masks) after K
+    crossings.  Equivalent to ``kwn_select`` up to tie handling; kept as the
+    semantics oracle + latency source.
+    """
+    n_codes = cb.n_codes
+    codes_all = ima_convert(mac, cb)                       # (..., N)
+
+    def step(carry, level):
+        n_found, mask = carry
+        crossing = (codes_all >= level) & (mask == 0.0)
+        # Priority encoding: admit crossings only while count < k, in index order.
+        order = jnp.cumsum(crossing.astype(jnp.int32), axis=-1)
+        admit = crossing & ((n_found[..., None] + order) <= k)
+        mask = mask + admit.astype(mask.dtype)
+        n_found = n_found + jnp.sum(admit.astype(jnp.int32), axis=-1)
+        return (n_found, mask), n_found
+
+    levels = jnp.arange(n_codes - 1, -1, -1)
+    batch_shape = mac.shape[:-1]
+    init = (jnp.zeros(batch_shape, jnp.int32), jnp.zeros_like(mac))
+    (n_found, mask), counts = jax.lax.scan(step, init, levels)
+
+    # Steps until K found (early stop): first scan index with count >= k.
+    reached = counts >= jnp.minimum(k, mac.shape[-1])      # (steps, ...)
+    adc_steps = jnp.argmax(reached, axis=0).astype(jnp.int32)
+    adc_steps = jnp.where(jnp.any(reached, axis=0), adc_steps, n_codes - 1)
+
+    # Extract winner indices/codes in ramp order (descending code, then index).
+    score = jnp.where(mask > 0, codes_all, -1)
+    tie = jnp.arange(mac.shape[-1], dtype=jnp.float32) * 1e-6
+    _, idx = jax.lax.top_k(score.astype(jnp.float32) - tie, k)
+    codes = jnp.take_along_axis(codes_all, idx, axis=-1)
+    return KWNResult(idx, codes, mask, adc_steps)
+
+
+# ---------------------------------------------------------------------------
+# Latency accounting (paper: ADC −30 %, LIF 10×)
+# ---------------------------------------------------------------------------
+
+def adc_latency_cycles(adc_steps: jax.Array, n_codes: int) -> dict:
+    """Early-stop ADC latency vs full ramp.
+
+    A full linear conversion sweeps all n_codes-1 steps; with early stop the
+    ramp halts at the K-th crossing.  Returns mean cycles and the saving
+    fraction (the paper measures ~30 % on DVS Gesture)."""
+    full = float(n_codes - 1)
+    mean_steps = float(jnp.mean(adc_steps.astype(jnp.float32)))
+    return {
+        "full_cycles": full,
+        "early_stop_cycles": mean_steps,
+        "saving_frac": 1.0 - mean_steps / full,
+    }
+
+
+def lif_latency_updates(k: int, n_neurons: int = 128) -> dict:
+    """Serial digital LIF: n updates full vs K with KWN (10x at K=12, N=128)."""
+    return {
+        "full_updates": float(n_neurons),
+        "kwn_updates": float(k),
+        "speedup": n_neurons / float(k),
+    }

@@ -1,0 +1,122 @@
+"""Digital LIF neuron with SNL + PRBS noise (paper C5, Eq. 1, Fig. 5).
+
+Hardware: a 3-stage pipeline (leak -> update -> compare) serially updates the
+V_mem register file (12-bit).  In KWN mode only the K winner columns receive a
+nonzero Z_j, so only K of 128 updates run (10x latency saving).  A Sensitive
+Neuron List (SNL) tracks neurons with V_th2 < V_mem < V_th1; PRBS noise n(t)
+lets them fire probabilistically, recovering spikes that top-K truncation would
+mistime (+0.5-0.6 % accuracy, Fig. 5b).
+
+Implemented as a pure functional state update usable inside lax.scan over time
+steps, with a surrogate-gradient spike for training.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import prbs
+
+
+class LIFParams(NamedTuple):
+    beta: float = 0.9          # leak factor
+    v_th1: float = 1.0         # firing threshold
+    v_th2: float = 0.6         # SNL lower threshold (V_th2 < V_mem < V_th1)
+    v_reset: float = 0.0
+    noise_amp: float = 0.05    # PRBS injection amplitude (V_mem LSBs)
+    vmem_bits: int = 12        # register width; V_mem is clipped to this range
+    surrogate_beta: float = 4.0
+
+
+class LIFState(NamedTuple):
+    v_mem: jax.Array           # (..., N)
+    prbs_state: jax.Array      # LFSR state (uint32 scalar)
+
+
+def lif_init(shape, seed: int = 1) -> LIFState:
+    return LIFState(jnp.zeros(shape, jnp.float32), prbs.lfsr_init(seed))
+
+
+@jax.custom_vjp
+def spike_fn(v: jax.Array, v_th: jax.Array) -> jax.Array:
+    return (v >= v_th).astype(jnp.float32)
+
+
+def _spike_fwd(v, v_th):
+    return spike_fn(v, v_th), (v, v_th)
+
+
+def _spike_bwd(res, g):
+    v, v_th = res
+    # Fast-sigmoid surrogate (SuperSpike).
+    beta = 4.0
+    x = beta * (v - v_th)
+    sg = 1.0 / (1.0 + jnp.abs(x)) ** 2 * beta
+    return g * sg, jnp.zeros_like(v_th)
+
+
+spike_fn.defvjp(_spike_fwd, _spike_bwd)
+
+
+def _vmem_clip(v: jax.Array, bits: int) -> jax.Array:
+    """12-bit signed register saturation (in threshold-normalized units)."""
+    lim = float(2 ** (bits - 1)) / 256.0  # 12b with 8 fractional bits
+    return jnp.clip(v, -lim, lim)
+
+
+def lif_step(state: LIFState, drive: jax.Array, p: LIFParams,
+             update_mask: jax.Array | None = None,
+             use_snl: bool = True) -> tuple[LIFState, jax.Array]:
+    """One time step of Eq. (1).
+
+    drive:        (..., N) quantized MAC input (Z_j mapped back through LUT);
+                  zero for non-winners in KWN mode.
+    update_mask:  (..., N) 1 for winners.  None -> dense update (NLD mode).
+    use_snl:      enable the sensitive-neuron probabilistic firing path.
+
+    Returns (new_state, spikes).
+    """
+    v = state.v_mem
+    if update_mask is None:
+        v_new = p.beta * v + drive
+        noise_state = state.prbs_state
+        noise = jnp.zeros_like(v)
+    else:
+        # Winners: leak + integrate.  Non-winners: hold (Eq. 1 bottom branch).
+        v_upd = p.beta * v + drive
+        v_new = jnp.where(update_mask > 0, v_upd, v)
+        if use_snl:
+            noise_state, noise = prbs.prbs_noise(state.prbs_state, v.shape, p.noise_amp)
+        else:
+            noise_state, noise = state.prbs_state, jnp.zeros_like(v)
+
+    if update_mask is not None and use_snl:
+        # SNL: neurons with v_th2 < V < v_th1 get the PRBS kick (even if they
+        # were not winners this step — that is the point of the list).
+        snl = (v_new > p.v_th2) & (v_new < p.v_th1)
+        v_new = jnp.where(snl, v_new + noise, v_new)
+
+    v_new = _vmem_clip(v_new, p.vmem_bits)
+    s = spike_fn(v_new, jnp.asarray(p.v_th1, v_new.dtype))
+    v_out = jnp.where(s > 0, p.v_reset, v_new)
+    if update_mask is None:
+        noise_state = state.prbs_state
+    return LIFState(v_out, noise_state), s
+
+
+def lif_run(state: LIFState, drives: jax.Array, p: LIFParams,
+            update_masks: jax.Array | None = None,
+            use_snl: bool = True) -> tuple[LIFState, jax.Array]:
+    """Scan over T time steps. drives: (T, ..., N)."""
+    def step(st, xs):
+        if update_masks is None:
+            d, m = xs, None
+        else:
+            d, m = xs
+        return lif_step(st, d, p, m, use_snl)
+
+    xs = drives if update_masks is None else (drives, update_masks)
+    return jax.lax.scan(step, state, xs)

@@ -1,0 +1,137 @@
+"""CIM macro simulator: 256x128 MAC array + 46x128 NL-IMA (paper Fig. 2).
+
+Combines the pieces: ternary inputs hit twin-cell MSB/LSB weight planes, the
+analog MAC (with optional variation model) lands on the RBLs, the IMA converts
+(linear, NLQ, or NL-activation ramp), and the mode logic (KWN / NLD) produces
+the LIF drive.
+
+Layers larger than the physical 256(rows) x 128(cols) array are tiled onto a
+*virtual macro grid*: row tiles accumulate in the digital domain (partial-sum
+adds after conversion are what the silicon would do across macro instances),
+column tiles are independent.  ``MacroGeometry`` tracks how many physical
+macro invocations a layer costs — the energy model consumes that.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ima as ima_lib
+from repro.core import kwn as kwn_lib
+from repro.core import ternary as ternary_lib
+
+MACRO_ROWS = 256   # MAC array word-lines (inputs)
+MACRO_COLS = 128   # columns (neurons)
+IMA_ROWS = 46      # ramp array rows
+
+
+class MacroGeometry(NamedTuple):
+    n_in: int
+    n_out: int
+    row_tiles: int
+    col_tiles: int
+
+    @property
+    def n_macros(self) -> int:
+        return self.row_tiles * self.col_tiles
+
+
+def geometry(n_in: int, n_out: int) -> MacroGeometry:
+    return MacroGeometry(
+        n_in, n_out,
+        row_tiles=math.ceil(n_in / MACRO_ROWS),
+        col_tiles=math.ceil(n_out / MACRO_COLS),
+    )
+
+
+class CIMMacroConfig(NamedTuple):
+    code_bits: int = 5                 # IMA resolution (5-bit over 8-bit range w/ NLQ)
+    mac_range: float = 64.0            # full-scale analog MAC range (in weight LSBs)
+    nlq_gamma: float = 2.0
+    ratio_sigma: float = 0.0           # MC current-ratio spread (0 = ideal)
+    ima_noise: ima_lib.IMANoiseModel | None = None  # None = ideal conversion
+
+
+def _codebooks(cfg: CIMMacroConfig):
+    lin = ima_lib.linear_codebook(cfg.code_bits, -cfg.mac_range, cfg.mac_range)
+    nlq = ima_lib.nlq_codebook(cfg.code_bits, -cfg.mac_range, cfg.mac_range,
+                               cfg.nlq_gamma)
+    return lin, nlq
+
+
+def cim_mac(spikes: jax.Array, w_int: jax.Array, cfg: CIMMacroConfig,
+            key: jax.Array | None = None) -> jax.Array:
+    """Analog ternary MAC: spikes (..., I) x int weights (I, N) in [-3, 3].
+
+    The MSB/LSB twin-cell split and (optional) current-ratio variation are
+    applied per column, exactly as the multi-VDD banks realize the weight.
+    """
+    msb, lsb = ternary_lib.weight_decompose(w_int)
+    if cfg.ratio_sigma > 0.0 and key is not None:
+        w_eff = ternary_lib.effective_weights(msb, lsb, key, cfg.ratio_sigma)
+    else:
+        w_eff = ternary_lib.weight_compose(msb, lsb)
+    s = ternary_lib.ternary_input_encode(spikes)
+    return jnp.einsum("...i,in->...n", s, w_eff)
+
+
+def kwn_forward(spikes: jax.Array, w_int: jax.Array, k: int,
+                cfg: CIMMacroConfig, key: jax.Array | None = None):
+    """KWN mode: MAC -> NLQ ramp (descending) -> top-K early stop.
+
+    Returns (drive, mask, result): drive is the LUT-mapped Z_j for winners and
+    exactly 0 for the rest (what the LIF receives), result carries indices /
+    codes / adc_steps for the latency model.
+    """
+    _, nlq = _codebooks(cfg)
+    mac = cim_mac(spikes, w_int, cfg, key)
+    if cfg.ima_noise is not None and key is not None:
+        k_noise = jax.random.fold_in(key, 1)
+        codes = ima_lib.ima_convert_noisy(mac, nlq, k_noise, cfg.ima_noise)
+        mac_eff = ima_lib.ima_reconstruct(codes, nlq)
+    else:
+        mac_eff = mac
+    res = kwn_lib.kwn_select(mac_eff, k, nlq)
+    drive = ima_lib.ima_reconstruct(
+        ima_lib.ima_convert(mac_eff, nlq), nlq) * res.mask
+    return drive, res.mask, res
+
+
+def nld_forward(spikes: jax.Array, dendrite_params, cfg: CIMMacroConfig,
+                activation: str = "quadratic", quantize: bool = True):
+    """NLD mode: branch MACs through the NL-activation ramp, soma combine."""
+    f = ima_lib.DENDRITE_ACTIVATIONS[activation]
+    cb = ima_lib.activation_codebook(cfg.code_bits, f, -cfg.mac_range,
+                                     cfg.mac_range)
+    from repro.core import dendrite as dendrite_lib
+    return dendrite_lib.dendrite_mac(
+        dendrite_params, spikes, f=f, nl_cb=cb, quantize=quantize)
+
+
+def tiled_cim_mac(spikes: jax.Array, w_int: jax.Array,
+                  cfg: CIMMacroConfig) -> tuple[jax.Array, MacroGeometry]:
+    """Large-layer path: tile (I, N) onto the 256x128 macro grid.
+
+    Row-tile partial sums are converted per tile then digitally accumulated —
+    this loses precision exactly like the silicon does, so we model it: each
+    row tile's analog MAC is IMA-quantized before the add.
+    """
+    n_in, n_out = w_int.shape
+    geo = geometry(n_in, n_out)
+    lin, _ = _codebooks(cfg)
+    pad_i = geo.row_tiles * MACRO_ROWS - n_in
+    pad_n = geo.col_tiles * MACRO_COLS - n_out
+    s = jnp.pad(spikes, [(0, 0)] * (spikes.ndim - 1) + [(0, pad_i)])
+    w = jnp.pad(w_int, [(0, pad_i), (0, pad_n)])
+    s_t = s.reshape(s.shape[:-1] + (geo.row_tiles, MACRO_ROWS))
+    w_t = w.reshape(geo.row_tiles, MACRO_ROWS, geo.col_tiles * MACRO_COLS)
+    msb, lsb = ternary_lib.weight_decompose(w_t)
+    w_eff = ternary_lib.weight_compose(msb, lsb)
+    partial = jnp.einsum("...tr,trn->...tn", s_t, w_eff)
+    partial_q = ima_lib.ima_quantize(partial, lin)
+    out = jnp.sum(partial_q, axis=-2)
+    return out[..., :n_out], geo

@@ -1,0 +1,56 @@
+"""Pseudo-Random Binary Sequence (PRBS) noise generator (paper C5, Fig. 5a).
+
+The silicon uses an LFSR-based PRBS to produce the noise term n(t) in Eq. (1),
+letting sensitive neurons fire probabilistically.  We implement a faithful
+Fibonacci LFSR (PRBS-15: x^15 + x^14 + 1) in pure JAX (jit/scan friendly) plus
+a convenience that maps the bitstream to symmetric integer noise amplitudes.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+PRBS15_TAPS = (15, 14)
+
+
+def lfsr_init(seed: int, width: int = 15) -> jax.Array:
+    """Non-zero LFSR state from an integer seed."""
+    state = (seed % ((1 << width) - 1)) + 1
+    return jnp.uint32(state)
+
+
+def lfsr_step(state: jax.Array, width: int = 15,
+              taps: Tuple[int, int] = PRBS15_TAPS) -> Tuple[jax.Array, jax.Array]:
+    """One LFSR step; returns (new_state, output_bit)."""
+    b1 = (state >> (taps[0] - 1)) & 1
+    b2 = (state >> (taps[1] - 1)) & 1
+    fb = b1 ^ b2
+    new = ((state << 1) | fb) & jnp.uint32((1 << width) - 1)
+    return new, fb
+
+
+def prbs_bits(state: jax.Array, n: int, width: int = 15) -> Tuple[jax.Array, jax.Array]:
+    """Generate n bits; returns (final_state, bits[n])."""
+    def step(s, _):
+        s, b = lfsr_step(s, width)
+        return s, b
+    final, bits = jax.lax.scan(step, state, None, length=n)
+    return final, bits.astype(jnp.int32)
+
+
+def prbs_noise(state: jax.Array, shape: Tuple[int, ...], amplitude: float,
+               width: int = 15) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric two-level noise n(t) in {-amplitude, +amplitude}.
+
+    This matches the hardware, where the PRBS bit selects the sign of a fixed
+    injected charge on V_mem.
+    """
+    n = 1
+    for d in shape:
+        n *= int(d)
+    state, bits = prbs_bits(state, n, width)
+    noise = (2.0 * bits.astype(jnp.float32) - 1.0) * amplitude
+    return state, noise.reshape(shape)

@@ -1,0 +1,121 @@
+"""Synthetic event-stream datasets (offline stand-ins for N-MNIST, DVS
+Gesture, Quiroga — see DESIGN.md data caveat).
+
+Each dataset produces ternary event tensors (T, N_in) in {-1, 0, +1} (OFF/
+none/ON), exactly the +/- RWL input format of the macro, with class-dependent
+spatio-temporal structure:
+
+* nmnist-like: static class prototypes (digit-ish blob patterns on a 16x16x2
+  retina) sampled as Poisson ON/OFF events with jitter -> 10 classes.
+* dvs-gesture-like: *moving* prototypes (drifting blobs with class-specific
+  velocity/rotation) -> temporal structure matters, 11 classes.
+* quiroga-like: 1-D extracellular waveform with embedded spike templates of
+  3 shapes + noise -> detection/sorting, ternary delta-encoded, 3 classes.
+
+Spike rates are calibrated to the energy model's assumptions
+(core/energy.py SPIKE_RATES) so pJ/SOP numbers and accuracy come from the
+same streams.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class EventDataConfig:
+    name: str
+    n_in: int
+    n_steps: int
+    n_classes: int
+    rate: float          # mean |event| probability per input per step
+    seed: int = 0
+    alpha: float = 0.45  # class-signal fraction (rest = shared background)
+    noise_frac: float = 0.6  # random-event rate as a fraction of ``rate``
+
+
+NMNIST = EventDataConfig("nmnist", 512, 20, 10, 0.029, alpha=0.55)
+DVS_GESTURE = EventDataConfig("dvs_gesture", 512, 30, 11, 0.0096 * 3,
+                              alpha=0.5, noise_frac=0.6)
+QUIROGA = EventDataConfig("quiroga", 256, 24, 3, 0.0176 * 2, alpha=0.5)
+
+
+def _prototypes(cfg: EventDataConfig) -> np.ndarray:
+    """Class prototype intensity maps in [-1, 1], (classes, T, N)."""
+    rng = np.random.default_rng(cfg.seed + 1234)
+    protos = np.zeros((cfg.n_classes, cfg.n_steps, cfg.n_in), np.float32)
+    side = int(np.sqrt(cfg.n_in // 2)) if cfg.name != "quiroga" else 0
+    for c in range(cfg.n_classes):
+        if cfg.name == "quiroga":
+            # spike template: biphasic waveform at class-specific width/pos
+            t0 = rng.integers(2, cfg.n_steps - 8)
+            width = 2 + c
+            wave = np.zeros((cfg.n_steps, cfg.n_in), np.float32)
+            chans = rng.choice(cfg.n_in, cfg.n_in // 4, replace=False)
+            for dt in range(width):
+                wave[t0 + dt, chans] = np.sin(np.pi * (dt + 1) / (width + 1))
+                wave[t0 + width + dt, chans] = -0.6 * np.sin(
+                    np.pi * (dt + 1) / (width + 1))
+            protos[c] = wave
+        else:
+            # blob(s) on a 2-channel retina; gestures move, digits are static
+            n_blobs = 2 + (c % 3)
+            xy = rng.uniform(2, side - 2, (n_blobs, 2))
+            vel = (rng.uniform(-0.4, 0.4, (n_blobs, 2))
+                   if cfg.name == "dvs_gesture" else np.zeros((n_blobs, 2)))
+            vel += (c % 4 - 1.5) * 0.1 * (cfg.name == "dvs_gesture")
+            for t in range(cfg.n_steps):
+                grid = np.zeros((side, side, 2), np.float32)
+                for b in range(n_blobs):
+                    cx, cy = xy[b] + vel[b] * t
+                    ys, xs = np.mgrid[0:side, 0:side]
+                    blob = np.exp(-(((xs - cx) ** 2 + (ys - cy) ** 2)
+                                    / (2.0 + 0.5 * b)))
+                    grid[:, :, b % 2] += blob
+                # channel 1 carries OFF polarity
+                grid[:, :, 1] *= -1.0
+                protos[c, t, : side * side * 2] = grid.reshape(-1)[: cfg.n_in]
+    # normalize to +-1 peak
+    peak = np.abs(protos).max(axis=(1, 2), keepdims=True) + 1e-6
+    protos = protos / peak
+    # difficulty: blend in a shared background pattern (classes overlap)
+    bg = protos.mean(axis=0, keepdims=True)
+    bg = bg / (np.abs(bg).max() + 1e-6)
+    return cfg.alpha * protos + (1 - cfg.alpha) * bg
+
+
+class EventDataset:
+    def __init__(self, cfg: EventDataConfig):
+        self.cfg = cfg
+        self.protos = jnp.asarray(_prototypes(cfg))
+
+    def sample(self, key: jax.Array, batch: int) -> Tuple[jax.Array, jax.Array]:
+        """Returns (events (B, T, N) in {-1,0,1}, labels (B,))."""
+        c = self.cfg
+        k1, k2, k3, k4 = jax.random.split(key, 4)
+        labels = jax.random.randint(k1, (batch,), 0, c.n_classes)
+        proto = self.protos[labels]                       # (B, T, N)
+        # per-sample gain + spatial jitter via roll
+        gain = jax.random.uniform(k2, (batch, 1, 1), minval=0.7, maxval=1.3)
+        p_evt = jnp.abs(proto) * gain * (c.rate / jnp.maximum(
+            jnp.mean(jnp.abs(proto)), 1e-6))
+        u = jax.random.uniform(k3, proto.shape)
+        fire = (u < jnp.clip(p_evt, 0, 0.9)).astype(jnp.float32)
+        pol = jnp.sign(proto)
+        noise_u = jax.random.uniform(k4, proto.shape)
+        noise = ((noise_u < c.rate * c.noise_frac).astype(jnp.float32)
+                 * jnp.sign(noise_u - 0.5))
+        ev = jnp.clip(fire * pol + noise, -1, 1)
+        return ev, labels
+
+    def measured_rate(self, key: jax.Array, batch: int = 64) -> float:
+        ev, _ = self.sample(key, batch)
+        return float(jnp.mean(jnp.abs(ev)))
+
+
+DATASETS = {"nmnist": NMNIST, "dvs_gesture": DVS_GESTURE, "quiroga": QUIROGA}

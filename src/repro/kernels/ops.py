@@ -1,0 +1,96 @@
+"""jit'd public wrappers for the Pallas kernels: padding, dtype handling, and
+the interpret-mode switch (CPU validation vs TPU execution).
+
+`INTERPRET` defaults to True because this container is CPU-only; on real TPU
+hardware set ``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import kwn_topk as _kwn
+from repro.kernels import lif_step as _lif
+from repro.kernels import nlq_lut as _nlq
+from repro.kernels import ternary_mac as _tmac
+
+INTERPRET = True
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int):
+    size = x.shape[axis]
+    pad = (-size) % mult
+    if pad == 0:
+        return x, size
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), size
+
+
+def ternary_mac(x: jax.Array, msb: jax.Array, lsb: jax.Array,
+                ratio: float = 2.0, bm: int | None = None,
+                bn: int | None = None, bk: int | None = None) -> jax.Array:
+    """Batched ternary MAC; x may have leading batch dims. Pads to tiles."""
+    lead = x.shape[:-1]
+    xm = x.reshape(-1, x.shape[-1])
+    bm_, bn_, bk_ = (bm or min(128, _ceil_mult(xm.shape[0], 8)),
+                     bn or 128, bk or 256)
+    bm_ = min(bm_, 128)
+    xm, m0 = _pad_to(xm, 0, bm_)
+    xm, k0 = _pad_to(xm, 1, bk_)
+    msb_p, _ = _pad_to(msb, 0, bk_)
+    msb_p, n0 = _pad_to(msb_p, 1, bn_)
+    lsb_p, _ = _pad_to(lsb, 0, bk_)
+    lsb_p, _ = _pad_to(lsb_p, 1, bn_)
+    out = _tmac.ternary_mac(xm.astype(jnp.int8), msb_p.astype(jnp.int8),
+                            lsb_p.astype(jnp.int8), bm=bm_, bn=bn_, bk=bk_,
+                            ratio=ratio, interpret=INTERPRET)
+    return out[:m0, :n0].reshape(*lead, n0)
+
+
+def _ceil_mult(n: int, m: int) -> int:
+    return max(m, ((n + m - 1) // m) * m)
+
+
+def kwn_topk(mac: jax.Array, boundaries: jax.Array, k: int):
+    """Batched KWN; mac (..., N) -> (mask (..., N), adc_steps (...,))."""
+    lead = mac.shape[:-1]
+    xm = mac.reshape(-1, mac.shape[-1]).astype(jnp.float32)
+    bm = min(128, _ceil_mult(xm.shape[0], 8))
+    xm, m0 = _pad_to(xm, 0, bm)
+    mask, steps = _kwn.kwn_topk(xm, boundaries.astype(jnp.float32), k, bm=bm,
+                                interpret=INTERPRET)
+    return (mask[:m0].reshape(*lead, mac.shape[-1]),
+            steps[:m0, 0].reshape(lead))
+
+
+def lif_step(v, drive, mask, noise, **params):
+    """Batched fused LIF; all (..., N)."""
+    lead = v.shape[:-1]
+    n = v.shape[-1]
+    flat = [a.reshape(-1, n).astype(jnp.float32) for a in (v, drive, mask, noise)]
+    bm = min(256, _ceil_mult(flat[0].shape[0], 8))
+    padded = []
+    m0 = flat[0].shape[0]
+    for a in flat:
+        a, _ = _pad_to(a, 0, bm)
+        padded.append(a)
+    v_out, spikes = _lif.lif_step_fused(*padded, bm=bm, interpret=INTERPRET,
+                                        **params)
+    return v_out[:m0].reshape(*lead, n), spikes[:m0].reshape(*lead, n)
+
+
+def nlq_convert(x, boundaries, levels):
+    """Batched NLQ; x (..., N) -> (codes, reconstruction)."""
+    lead = x.shape[:-1]
+    n = x.shape[-1]
+    xm = x.reshape(-1, n).astype(jnp.float32)
+    bm = min(256, _ceil_mult(xm.shape[0], 8))
+    xm, m0 = _pad_to(xm, 0, bm)
+    codes, y = _nlq.nlq_convert(xm, boundaries.astype(jnp.float32),
+                                levels.astype(jnp.float32), bm=bm,
+                                interpret=INTERPRET)
+    return codes[:m0].reshape(*lead, n), y[:m0].reshape(*lead, n)

@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+These are deliberately written against the *core* library semantics so kernel
+tests check kernels against the same code the SNN models execute.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ima as ima_lib
+from repro.core import kwn as kwn_lib
+
+
+def ternary_mac_ref(x: jax.Array, msb: jax.Array, lsb: jax.Array,
+                    ratio: float = 2.0) -> jax.Array:
+    """f32 GEMM against the decoded twin-cell weights."""
+    w = ratio * msb.astype(jnp.float32) + lsb.astype(jnp.float32)
+    return x.astype(jnp.float32) @ w
+
+
+def kwn_topk_ref(mac: jax.Array, boundaries: jax.Array, k: int):
+    """(mask, adc_steps) via the core ramp-scan semantics."""
+    levels = jnp.concatenate([boundaries, boundaries[-1:]])  # placeholder levels
+    cb = ima_lib.RampCodebook(levels=jnp.zeros(boundaries.shape[0] + 1),
+                              boundaries=boundaries,
+                              in_lo=float(boundaries[0]),
+                              in_hi=float(boundaries[-1]))
+    res = kwn_lib.kwn_select(mac, k, cb)
+    return res.mask, res.adc_steps[..., None].astype(jnp.int32)
+
+
+def lif_step_ref(v, drive, mask, noise, beta=0.9, v_th1=1.0, v_th2=0.6,
+                 v_reset=0.0, v_lim=8.0, use_snl=True):
+    v_new = jnp.where(mask > 0, beta * v + drive, v)
+    if use_snl:
+        snl = (v_new > v_th2) & (v_new < v_th1)
+        v_new = jnp.where(snl, v_new + noise, v_new)
+    v_new = jnp.clip(v_new, -v_lim, v_lim)
+    spike = (v_new >= v_th1).astype(jnp.float32)
+    return jnp.where(spike > 0, v_reset, v_new), spike
+
+
+def nlq_convert_ref(x, boundaries, levels):
+    code = jnp.searchsorted(boundaries, x, side="left").astype(jnp.int32)
+    # kernel uses strict '>' compare: match searchsorted side for exact ties
+    code = jnp.sum(x[..., None] > boundaries, axis=-1).astype(jnp.int32)
+    return code, jnp.take(levels, code)

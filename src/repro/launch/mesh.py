@@ -1,0 +1,24 @@
+"""Production mesh definitions.
+
+A function (not a module-level constant) so importing never touches jax device
+state.  Single pod: 16x16 = 256 chips ("data","model").  Multi-pod: 2 pods of
+256 = 512 chips ("pod","data","model"); DP spans ("pod","data"), and the "pod"
+axis can alternatively drive pipeline stages (dist/pipeline.py) to keep
+activation collectives intra-pod.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Degenerate mesh over whatever devices exist (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))

@@ -1,0 +1,783 @@
+"""Unified LM-family model: dense / MoE / local-global attention / xLSTM /
+RG-LRU hybrid / encoder-only audio / VLM-backbone, assembled from a repeating
+block *pattern* that is scanned over groups (compile-time O(pattern), not
+O(layers)).
+
+Paper integration points:
+  * MoE router = KWN selection (nn/moe.py, paper C3);
+  * optional KWN-FFN activation sparsity (``kwn_ffn_k``, Eq. 1 with FFN units
+    as the 128-column neuron bank);
+  * optional CIM-mode projections (``cim_linear``: ternary twin-cell weights +
+    NLQ activations, paper C1/C2).
+
+Modality frontends are stubs per the assignment: audio gets precomputed frame
+embeddings, VLM gets precomputed ViT patch embeddings; both pass through a
+learned projector.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import attention, layers, moe, recurrent
+from repro.nn.module import ParamSpec
+
+
+@dataclasses.dataclass(frozen=True)
+class LMConfig:
+    name: str
+    family: str                     # moe|dense|audio|ssm|hybrid|vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 -> d_model // n_heads
+    activation: str = "silu"
+    gated_ffn: bool = True
+    qkv_bias: bool = False
+    attn_softcap: float | None = None
+    final_softcap: float | None = None
+    rope_theta: float = 10000.0
+    pattern: tuple[str, ...] = ("attn",)   # attn | attn_local | mlstm | slstm | rglru
+    window: int | None = None
+    moe: bool = False
+    n_experts: int = 0
+    moe_top_k: int = 0
+    moe_dense_residual: bool = False       # arctic: parallel dense FFN
+    n_shared_experts: int = 0              # kimi: always-on experts
+    encoder_only: bool = False
+    frontend: str | None = None            # audio_frames | vision_patches
+    frontend_dim: int = 0
+    n_patches: int = 0
+    tie_embeddings: bool = False
+    scale_embed: bool = False
+    post_norms: bool = False
+    d_rnn: int = 0
+    dtype: str = "bfloat16"
+    remat: bool = True
+    remat_mode: str = "group"        # group | attn_only  (§Perf knob)
+    remat_policy: str = "nothing"    # nothing | dots     (§Perf knob)
+    attn_chunk: int = 1024
+    kv_quant: str | None = None      # None | int8 | int4 (§Perf: NLQ-for-KV)
+    moe_wire_dtype: str = "bfloat16"  # bfloat16 | int8   (§Perf: a2a compression)
+    moe_capacity_factor: float = 1.25
+    cim_linear: bool = False
+    kwn_ffn_k: int = 0
+    sharding_overrides: dict | None = None
+    supports_long_context: bool = False
+    vocab_pad_to: int = 256
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def padded_vocab(self) -> int:
+        v, m = self.vocab_size, self.vocab_pad_to
+        return ((v + m - 1) // m) * m
+
+    @property
+    def n_groups(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail_pattern(self) -> tuple[str, ...]:
+        r = self.n_layers % len(self.pattern)
+        return self.pattern[:r]
+
+    @property
+    def compute_dtype(self):
+        return jnp.bfloat16 if self.dtype == "bfloat16" else jnp.float32
+
+    def param_count(self) -> int:
+        from repro.nn.module import count_params
+        return count_params(param_specs(self))
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: only top-k experts count)."""
+        total = self.param_count()
+        if not self.moe:
+            return total
+        from repro.nn.module import count_params
+        expert = moe.moe_specs(self.d_model, self.d_ff, self.n_experts)
+        expert_total = count_params({k: v for k, v in expert.items()
+                                     if k != "router"})
+        n_moe_layers = sum(1 for _ in range(self.n_layers))
+        dense_frac = (self.moe_top_k + self.n_shared_experts) / self.n_experts
+        return int(total - expert_total * n_moe_layers * (1 - dense_frac))
+
+
+# ===========================================================================
+# Param specs
+# ===========================================================================
+
+def _ffn_specs(cfg: LMConfig) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    s = {"w_in": layers.linear_spec(d, f, "embed", "ffn")}
+    if cfg.gated_ffn:
+        s["w_gate"] = layers.linear_spec(d, f, "embed", "ffn")
+    s["w_out"] = layers.linear_spec(f, d, "ffn", "embed")
+    return s
+
+
+def _block_specs(cfg: LMConfig, kind: str) -> dict:
+    d = cfg.d_model
+    s: dict[str, Any] = {"norm1": layers.norm_spec(d)}
+    if kind in ("attn", "attn_local"):
+        s["attn"] = attention.attention_specs(d, cfg.n_heads, cfg.n_kv, cfg.hd,
+                                              cfg.qkv_bias)
+    elif kind == "mlstm":
+        s["cell"] = recurrent.mlstm_specs(d, cfg.n_heads)
+    elif kind == "slstm":
+        s["cell"] = recurrent.slstm_specs(d, cfg.n_heads)
+    elif kind == "rglru":
+        s["cell"] = recurrent.rglru_specs(d, cfg.d_rnn or d)
+    else:
+        raise ValueError(kind)
+    if cfg.post_norms:
+        s["norm1_post"] = layers.norm_spec(d)
+
+    has_ffn = cfg.d_ff > 0 and kind not in ("mlstm", "slstm")
+    if has_ffn:
+        s["norm2"] = layers.norm_spec(d)
+        if cfg.moe:
+            s["moe"] = moe.moe_specs(d, cfg.d_ff, cfg.n_experts)
+            if cfg.moe_dense_residual:
+                s["ffn"] = _ffn_specs(cfg)
+            if cfg.n_shared_experts:
+                shared = dataclasses.replace(
+                    cfg, d_ff=cfg.d_ff * cfg.n_shared_experts, moe=False)
+                s["shared"] = _ffn_specs(shared)
+        else:
+            s["ffn"] = _ffn_specs(cfg)
+        if cfg.post_norms:
+            s["norm2_post"] = layers.norm_spec(d)
+    return s
+
+
+def _stack_specs(specs: dict, n: int) -> dict:
+    """Prepend a layer-group dim to every leaf spec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (None,) + s.axes, s.dtype,
+                            s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def param_specs(cfg: LMConfig) -> dict:
+    d = cfg.d_model
+    p: dict[str, Any] = {}
+    if cfg.frontend == "audio_frames":
+        p["frontend_proj"] = layers.linear_spec(cfg.frontend_dim, d,
+                                                "embed", None)
+    if cfg.frontend == "vision_patches":
+        p["patch_proj"] = layers.linear_spec(cfg.frontend_dim, d, None, "embed")
+    if cfg.frontend != "audio_frames":
+        p["embed"] = layers.embed_spec(cfg.padded_vocab, d)
+    blocks = {}
+    for j, kind in enumerate(cfg.pattern):
+        blocks[f"b{j}"] = _stack_specs(_block_specs(cfg, kind), cfg.n_groups)
+    p["layers"] = blocks
+    for j, kind in enumerate(cfg.tail_pattern):
+        p[f"tail{j}"] = _block_specs(cfg, kind)
+    p["final_norm"] = layers.norm_spec(d)
+    if cfg.encoder_only:
+        p["head"] = layers.linear_spec(d, cfg.vocab_size, "embed", "classes")
+    elif not cfg.tie_embeddings:
+        p["head"] = layers.linear_spec(d, cfg.padded_vocab, "embed", "vocab")
+    return p
+
+
+# ===========================================================================
+# Forward (train / prefill)
+# ===========================================================================
+
+def _ffn_apply(p: dict, x: jax.Array, cfg: LMConfig) -> jax.Array:
+    lin = layers.cim_linear if cfg.cim_linear else layers.linear
+    act = layers.ACTIVATIONS[cfg.activation]
+    h = act(lin(p["w_in"], x))
+    if cfg.gated_ffn:
+        h = h * lin(p["w_gate"], x)
+    if cfg.kwn_ffn_k > 0:
+        # Eq. (1) on FFN units: keep top-k activations per token, zero rest.
+        k = cfg.kwn_ffn_k
+        thresh = jax.lax.top_k(jnp.abs(h), k)[0][..., -1:]
+        h = jnp.where(jnp.abs(h) >= thresh, h, 0.0)
+    return lin(p["w_out"], h)
+
+
+def _moe_apply(p: dict, x: jax.Array, cfg: LMConfig, mesh, decode: bool):
+    overrides = cfg.sharding_overrides or {}
+    seq_sharded = overrides.get("seq") == "model"
+    experts_rule = overrides.get("experts", "model")
+    is_2d = experts_rule not in (None, "model")   # experts over DP rows
+    if mesh is None:
+        y, aux = moe.moe_ref(p["moe"], x, k=cfg.moe_top_k,
+                             activation=cfg.activation)
+    elif is_2d and not decode:
+        y, aux = moe.moe_2d(p["moe"], x, k=cfg.moe_top_k, mesh=mesh,
+                            activation=cfg.activation,
+                            expert_axes=tuple(experts_rule),
+                            capacity_factor=cfg.moe_capacity_factor,
+                            wire_dtype=cfg.moe_wire_dtype)
+    elif is_2d and decode:
+        y, aux = moe.moe_dense_ep_2d(p["moe"], x, k=cfg.moe_top_k, mesh=mesh,
+                                     activation=cfg.activation,
+                                     expert_axes=tuple(experts_rule))
+    elif decode:
+        y, aux = moe.moe_dense_ep(p["moe"], x, k=cfg.moe_top_k, mesh=mesh,
+                                  activation=cfg.activation)
+    else:
+        y, aux = moe.moe_a2a(p["moe"], x, k=cfg.moe_top_k, mesh=mesh,
+                             activation=cfg.activation,
+                             seq_sharded=seq_sharded)
+    if cfg.moe_dense_residual:
+        y = y + _ffn_apply(p["ffn"], x, cfg)
+    if cfg.n_shared_experts:
+        shared_cfg = dataclasses.replace(cfg, moe=False)
+        y = y + _ffn_apply(p["shared"], x, shared_cfg)
+    return y, aux
+
+
+def _block_apply(kind: str, p: dict, x: jax.Array, positions, cfg: LMConfig,
+                 mesh=None, prefill: bool = False):
+    """Returns (x, aux_loss, cache_entry-or-None)."""
+    aux = jnp.zeros((), jnp.float32)
+    cache = None
+    h = layers.rmsnorm(p["norm1"], x)
+    if kind in ("attn", "attn_local"):
+        window = cfg.window if kind == "attn_local" else None
+        attn_fn = functools.partial(
+            attention.mha, n_heads=cfg.n_heads,
+            n_kv=cfg.n_kv, head_dim=cfg.hd,
+            causal=not cfg.encoder_only, window=window,
+            attn_softcap=cfg.attn_softcap,
+            rope_theta=cfg.rope_theta, chunk=cfg.attn_chunk,
+            return_kv=prefill)
+        if cfg.remat and cfg.remat_mode == "attn_only":
+            # §Perf knob: remat ONLY attention; FFN/MoE residuals (incl. the
+            # collective outputs) are saved -> the expensive MoE collectives
+            # and GEMMs run 2 passes (fwd+bwd) instead of 3.
+            attn_fn = jax.checkpoint(
+                attn_fn, policy=jax.checkpoint_policies.nothing_saveable)
+        h = attn_fn(p["attn"], h, positions)
+        if prefill:
+            h, (k, v) = h
+            cache = attention.prefill_cache_from_kv(k, v, window)
+            if cfg.kv_quant and "slot_pos" not in cache:
+                from repro.nn import kvq
+                kq, ks = kvq.quantize(cache["k"], cfg.kv_quant)
+                vq, vs = kvq.quantize(cache["v"], cfg.kv_quant)
+                cache = {"k": kq, "v": vq, "k_scale": ks, "v_scale": vs}
+    elif kind == "mlstm":
+        h = recurrent.mlstm_forward(p["cell"], h, cfg.n_heads,
+                                    return_state=prefill)
+        if prefill:
+            h, st = h
+            cache = {"c": st.c, "n": st.n, "m": st.m}
+    elif kind == "slstm":
+        h = recurrent.slstm_forward(p["cell"], h, cfg.n_heads,
+                                    return_state=prefill)
+        if prefill:
+            h, st = h
+            cache = {"c": st.c, "n": st.n, "h": st.h, "m": st.m}
+    elif kind == "rglru":
+        h = recurrent.rglru_forward(p["cell"], h, return_state=prefill)
+        if prefill:
+            h, st = h
+            cache = {"h": st.h, "conv": st.conv}
+    if cfg.post_norms:
+        h = layers.rmsnorm(p["norm1_post"], h)
+    x = x + h
+
+    if "norm2" in p:
+        h = layers.rmsnorm(p["norm2"], x)
+        if cfg.moe:
+            h, aux = _moe_apply(p, h, cfg, mesh, decode=False)
+        else:
+            h = _ffn_apply(p["ffn"] if "ffn" in p else p, h, cfg)
+        if cfg.post_norms:
+            h = layers.rmsnorm(p["norm2_post"], h)
+        x = x + h
+    return x, aux, cache
+
+
+def _constrain_acts(x: jax.Array, cfg: LMConfig, mesh):
+    """Sequence-parallel activation constraint (Megatron SP): shard the
+    residual stream (B, S, D) over ("pod","data") x "model"(seq) so per-layer
+    scan carries stay sharded.  No-op when mesh is None, seq is not
+    rule-mapped, or dims do not divide (partition_spec falls back)."""
+    if mesh is None or x.ndim != 3 or x.shape[1] <= 1:
+        return x
+    overrides = cfg.sharding_overrides or {}
+    if overrides.get("seq") != "model":
+        return x
+    from jax.sharding import NamedSharding
+    from repro.nn import module as _m
+    rules = dict(_m.DEFAULT_RULES)
+    rules.update(overrides)
+    spec = _m.partition_spec(tuple(x.shape), ("batch", "seq", None), mesh,
+                             rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def _embed_inputs(params, batch, cfg: LMConfig):
+    if cfg.frontend == "audio_frames":
+        x = layers.linear(params["frontend_proj"],
+                          batch["frames"].astype(cfg.compute_dtype))
+        return x
+    x = layers.embed(params["embed"], batch["tokens"],
+                     scale_by_dim=cfg.scale_embed).astype(cfg.compute_dtype)
+    if cfg.frontend == "vision_patches":
+        patches = layers.linear(params["patch_proj"],
+                                batch["patches"].astype(cfg.compute_dtype))
+        x = jnp.concatenate([patches, x], axis=1)
+    return x
+
+
+def forward(params: dict, batch: dict, cfg: LMConfig, mesh=None,
+            prefill: bool = False):
+    """Returns (logits, aux_loss[, cache]).
+
+    prefill=True is the serving prefill: logits only for the LAST position
+    (no (B,S,V) logits tensor) and the per-layer decode cache is returned
+    (KV ring-ordered for local layers, recurrent states for ssm/hybrid)."""
+    x = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+
+    x = _constrain_acts(x, cfg, mesh)
+
+    def group_fn(x, gp):
+        aux_g = jnp.zeros((), jnp.float32)
+        caches = {}
+        for j, kind in enumerate(cfg.pattern):
+            x, aux, c = _block_apply(kind, gp[f"b{j}"], x, positions, cfg,
+                                     mesh, prefill=prefill)
+            x = _constrain_acts(x, cfg, mesh)
+            aux_g = aux_g + aux
+            if prefill:
+                caches[f"b{j}"] = c
+        return x, aux_g, caches
+
+    if cfg.remat and cfg.remat_mode == "group":
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        elif cfg.remat_policy == "save_moe_recv":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "moe_xfull")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        group_fn = jax.checkpoint(group_fn, policy=policy)
+
+    def scan_body(carry, gp):
+        x, aux_acc = carry
+        x, aux_g, caches = group_fn(x, gp)
+        return (x, aux_acc + aux_g), caches
+
+    (x, aux), stacked_caches = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32)), params["layers"])
+    cache = dict(stacked_caches) if prefill else None
+    for j, kind in enumerate(cfg.tail_pattern):
+        x, aux_t, c = _block_apply(kind, params[f"tail{j}"], x, positions, cfg,
+                                   mesh, prefill=prefill)
+        aux = aux + aux_t
+        if prefill:
+            cache[f"tail{j}"] = c
+
+    x = layers.rmsnorm(params["final_norm"], x)
+    if prefill:
+        x = x[:, -1:]
+    if cfg.encoder_only:
+        logits = layers.linear(params["head"], x)
+    elif cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["head"], x)
+    logits = layers.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    if prefill:
+        return logits[:, 0], aux, cache
+    return logits, aux
+
+
+def _head_and_ce(params: dict, x: jax.Array, batch: dict, cfg: LMConfig):
+    """Unembed + cross-entropy, rematted as one unit so the (B, S, V) logits
+    and softmax residuals are never saved for backward (recomputed instead) —
+    without this the vocab-sized temporaries dominate training memory."""
+    if cfg.encoder_only:
+        logits = layers.linear(params["head"], x).astype(jnp.float32)
+        targets = batch["targets"]
+        mask = batch["loss_mask"].astype(jnp.float32)
+        lse = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.take_along_axis(lse, targets[..., None], axis=-1)[..., 0]
+        return jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["head"], x)
+    logits = layers.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    tokens = batch["tokens"]
+    n_prefix = cfg.n_patches if cfg.frontend == "vision_patches" else 0
+    logits_txt = logits[:, n_prefix:]
+    targets = tokens[:, 1:]
+    lse = jax.nn.log_softmax(logits_txt[:, :-1], axis=-1)
+    ce = -jnp.take_along_axis(lse, targets[..., None], axis=-1)[..., 0]
+    mask = batch.get("loss_mask")
+    if mask is not None:
+        m = mask[:, 1:].astype(jnp.float32)
+        return jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(ce)
+
+
+def features(params: dict, batch: dict, cfg: LMConfig, mesh=None):
+    """Forward up to (but excluding) the unembedding: (x, aux)."""
+    x = _embed_inputs(params, batch, cfg)
+    b, s, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(s), (b, s))
+    x = _constrain_acts(x, cfg, mesh)
+
+    def group_fn(x, gp):
+        aux_g = jnp.zeros((), jnp.float32)
+        for j, kind in enumerate(cfg.pattern):
+            x, aux, _ = _block_apply(kind, gp[f"b{j}"], x, positions, cfg, mesh)
+            x = _constrain_acts(x, cfg, mesh)
+            aux_g = aux_g + aux
+        return x, aux_g
+
+    if cfg.remat and cfg.remat_mode == "group":
+        if cfg.remat_policy == "dots":
+            policy = jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        elif cfg.remat_policy == "save_moe_recv":
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "moe_xfull")
+        else:
+            policy = jax.checkpoint_policies.nothing_saveable
+        group_fn = jax.checkpoint(group_fn, policy=policy)
+
+    def scan_body(carry, gp):
+        x, aux_acc = carry
+        x, aux_g = group_fn(x, gp)
+        return (x, aux_acc + aux_g), None
+
+    (x, aux), _ = jax.lax.scan(scan_body, (x, jnp.zeros((), jnp.float32)),
+                               params["layers"])
+    for j, kind in enumerate(cfg.tail_pattern):
+        x, aux_t, _ = _block_apply(kind, params[f"tail{j}"], x, positions,
+                                   cfg, mesh)
+        aux = aux + aux_t
+    return layers.rmsnorm(params["final_norm"], x), aux
+
+
+def loss_fn(params: dict, batch: dict, cfg: LMConfig, mesh=None) -> tuple[jax.Array, dict]:
+    x, aux = features(params, batch, cfg, mesh)
+    head_keys = [k for k in ("head", "embed") if k in params]
+    head_params = {k: params[k] for k in head_keys}
+    ce_fn = jax.checkpoint(
+        functools.partial(_head_and_ce, cfg=cfg),
+        policy=jax.checkpoint_policies.nothing_saveable)
+    loss = ce_fn(head_params, x, batch)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+def _legacy_loss_fn(params: dict, batch: dict, cfg: LMConfig, mesh=None):
+    logits, aux = forward(params, batch, cfg, mesh)
+    if cfg.encoder_only:
+        # Masked-prediction CE (HuBERT-style): loss on masked frames only.
+        targets = batch["targets"]
+        mask = batch["loss_mask"].astype(jnp.float32)
+        lse = jax.nn.log_softmax(logits, axis=-1)
+        ce = -jnp.take_along_axis(lse, targets[..., None], axis=-1)[..., 0]
+        loss = jnp.sum(ce * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    else:
+        tokens = batch["tokens"]
+        n_prefix = cfg.n_patches if cfg.frontend == "vision_patches" else 0
+        logits_txt = logits[:, n_prefix:]
+        targets = tokens[:, 1:]
+        lse = jax.nn.log_softmax(logits_txt[:, :-1], axis=-1)
+        ce = -jnp.take_along_axis(lse, targets[..., None], axis=-1)[..., 0]
+        mask = batch.get("loss_mask")
+        if mask is not None:
+            m = mask[:, 1:].astype(jnp.float32)
+            loss = jnp.sum(ce * m) / jnp.maximum(jnp.sum(m), 1.0)
+        else:
+            loss = jnp.mean(ce)
+    total = loss + 0.01 * aux
+    return total, {"ce": loss, "aux": aux}
+
+
+# ===========================================================================
+# Decode (serve_step)
+# ===========================================================================
+
+def _cache_spec_for(kind: str, cfg: LMConfig, batch: int, s_max: int):
+    hd = cfg.hd
+    if kind == "attn":
+        if cfg.kv_quant:
+            from repro.nn import kvq
+            sd = kvq.storage_dtype(cfg.kv_quant)
+            hs = kvq.storage_shape(hd, cfg.kv_quant)
+            shape = (batch, s_max, cfg.n_kv, hs)
+            sshape = (batch, s_max, cfg.n_kv, 1)
+            return {"k": jnp.zeros(shape, sd), "v": jnp.zeros(shape, sd),
+                    "k_scale": jnp.zeros(sshape, jnp.float32),
+                    "v_scale": jnp.zeros(sshape, jnp.float32)}
+        shape = (batch, s_max, cfg.n_kv, hd)
+        return {"k": jnp.zeros(shape, cfg.compute_dtype),
+                "v": jnp.zeros(shape, cfg.compute_dtype)}
+    if kind == "attn_local":
+        w = min(cfg.window or s_max, s_max)
+        shape = (batch, w, cfg.n_kv, hd)
+        return {"k": jnp.zeros(shape, cfg.compute_dtype),
+                "v": jnp.zeros(shape, cfg.compute_dtype),
+                "slot_pos": jnp.full((batch, w), -1, jnp.int32)}
+    if kind == "mlstm":
+        st = recurrent.mlstm_init_state(batch, cfg.n_heads,
+                                        cfg.d_model // cfg.n_heads)
+        return {"c": st.c, "n": st.n, "m": st.m}
+    if kind == "slstm":
+        st = recurrent.slstm_init_state(batch, cfg.n_heads,
+                                        cfg.d_model // cfg.n_heads)
+        return {"c": st.c, "n": st.n, "h": st.h, "m": st.m}
+    if kind == "rglru":
+        st = recurrent.rglru_init_state(batch, cfg.d_rnn or cfg.d_model)
+        return {"h": st.h, "conv": st.conv}
+    raise ValueError(kind)
+
+
+def init_cache(cfg: LMConfig, batch: int, s_max: int) -> dict:
+    def stack(tree, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x[None], (n,) + x.shape),
+                            tree)
+    cache = {}
+    for j, kind in enumerate(cfg.pattern):
+        cache[f"b{j}"] = stack(_cache_spec_for(kind, cfg, batch, s_max),
+                               cfg.n_groups)
+    for j, kind in enumerate(cfg.tail_pattern):
+        cache[f"tail{j}"] = _cache_spec_for(kind, cfg, batch, s_max)
+    return cache
+
+
+def pad_cache(cache: dict, cfg: LMConfig, s_max: int) -> dict:
+    """Grow a prefill-produced cache (seq = prompt length) to ``s_max`` slots
+    so decode can append: global-attention K/V (+scales) are zero-padded on
+    the sequence dim; ring buffers and recurrent states are already final."""
+    def pad_entry(entry: dict) -> dict:
+        if not isinstance(entry, dict) or "slot_pos" in entry \
+                or "k" not in entry:
+            return entry
+        out = {}
+        for key, v in entry.items():
+            seq_dim = v.ndim - 3  # (..., B, S, G, hd|1)
+            cur = v.shape[seq_dim]
+            if cur >= s_max:
+                out[key] = v
+            else:
+                widths = [(0, 0)] * v.ndim
+                widths[seq_dim] = (0, s_max - cur)
+                out[key] = jnp.pad(v, widths)
+        return out
+
+    return {name: pad_entry(entry) for name, entry in cache.items()}
+
+
+def cache_axes(cfg: LMConfig) -> dict:
+    """Logical axes per cache leaf (for sharding)."""
+    def axes_for(kind):
+        if kind == "attn":
+            kv = {"k": (None, "batch", "cache_seq", "cache_heads", None),
+                  "v": (None, "batch", "cache_seq", "cache_heads", None)}
+            if cfg.kv_quant:
+                kv["k_scale"] = (None, "batch", "cache_seq", "cache_heads",
+                                 None)
+                kv["v_scale"] = (None, "batch", "cache_seq", "cache_heads",
+                                 None)
+            return kv
+        if kind == "attn_local":
+            return {"k": (None, "batch", "cache_seq", "cache_heads", None),
+                    "v": (None, "batch", "cache_seq", "cache_heads", None),
+                    "slot_pos": (None, "batch", None)}
+        if kind == "mlstm":
+            return {"c": (None, "batch", None, None, None),
+                    "n": (None, "batch", None, None),
+                    "m": (None, "batch", None)}
+        if kind == "slstm":
+            return {k: (None, "batch", None, None) for k in "cnhm"}
+        if kind == "rglru":
+            return {"h": (None, "batch", "ffn"),
+                    "conv": (None, "batch", None, "ffn")}
+        raise ValueError(kind)
+
+    ax = {}
+    for j, kind in enumerate(cfg.pattern):
+        ax[f"b{j}"] = axes_for(kind)
+    for j, kind in enumerate(cfg.tail_pattern):
+        ax[f"tail{j}"] = jax.tree.map(lambda a: a[1:], axes_for(kind),
+                                      is_leaf=lambda x: isinstance(x, tuple))
+    return ax
+
+
+def _block_decode(kind: str, p: dict, x, cache: dict, pos, cfg: LMConfig,
+                  mesh=None):
+    h = layers.rmsnorm(p["norm1"], x)
+    if kind == "attn":
+        if cfg.kv_quant:
+            h, cache = attention.mha_decode_quant(
+                p["attn"], h, cache, pos, n_heads=cfg.n_heads,
+                n_kv=cfg.n_kv, head_dim=cfg.hd, kv_quant=cfg.kv_quant,
+                attn_softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta)
+        else:
+            kv = attention.KVCache(cache["k"], cache["v"])
+            h, kv = attention.mha_decode(p["attn"], h, kv, pos,
+                                         n_heads=cfg.n_heads,
+                                         n_kv=cfg.n_kv, head_dim=cfg.hd,
+                                         attn_softcap=cfg.attn_softcap,
+                                         rope_theta=cfg.rope_theta)
+            cache = {"k": kv.k, "v": kv.v}
+    elif kind == "attn_local":
+        h, cache = _ring_decode(p["attn"], h, cache, pos, cfg)
+    elif kind == "mlstm":
+        st = recurrent.MLSTMState(cache["c"], cache["n"], cache["m"])
+        h, st = recurrent.mlstm_decode_step(p["cell"], h, st, cfg.n_heads)
+        cache = {"c": st.c, "n": st.n, "m": st.m}
+    elif kind == "slstm":
+        st = recurrent.SLSTMState(cache["c"], cache["n"], cache["h"], cache["m"])
+        h, st = recurrent.slstm_decode_step(p["cell"], h, st, cfg.n_heads)
+        cache = {"c": st.c, "n": st.n, "h": st.h, "m": st.m}
+    elif kind == "rglru":
+        st = recurrent.RGLRUState(cache["h"], cache["conv"])
+        h, st = recurrent.rglru_decode_step(p["cell"], h, st)
+        cache = {"h": st.h, "conv": st.conv}
+    if cfg.post_norms:
+        h = layers.rmsnorm(p["norm1_post"], h)
+    x = x + h
+    if "norm2" in p:
+        h = layers.rmsnorm(p["norm2"], x)
+        if cfg.moe:
+            h, _ = _moe_apply(p, h, cfg, mesh, decode=True)
+        else:
+            h = _ffn_apply(p["ffn"] if "ffn" in p else p, h, cfg)
+        if cfg.post_norms:
+            h = layers.rmsnorm(p["norm2_post"], h)
+        x = x + h
+    return x, cache
+
+
+def _ring_decode(p, x, cache, pos, cfg: LMConfig):
+    """Sliding-window ring-buffer decode for local attention layers."""
+    b = x.shape[0]
+    w = cache["k"].shape[1]
+    q = attention._split_heads(layers.linear(p["wq"], x), cfg.n_heads, cfg.hd)
+    k_new = attention._split_heads(layers.linear(p["wk"], x), cfg.n_kv, cfg.hd)
+    v_new = attention._split_heads(layers.linear(p["wv"], x), cfg.n_kv, cfg.hd)
+    q = layers.rope(q, pos[:, None], cfg.rope_theta)
+    k_new = layers.rope(k_new, pos[:, None], cfg.rope_theta)
+
+    slot = pos % w
+    onehot = jax.nn.one_hot(slot, w, dtype=cache["k"].dtype)           # (B,W)
+    k_c = cache["k"] * (1 - onehot[..., None, None]) + onehot[..., None, None] * k_new
+    v_c = cache["v"] * (1 - onehot[..., None, None]) + onehot[..., None, None] * v_new
+    slot_pos = (cache["slot_pos"] * (1 - onehot.astype(jnp.int32))
+                + onehot.astype(jnp.int32) * pos[:, None])
+
+    n_rep = cfg.n_heads // cfg.n_kv
+    kk, vv = attention._repeat_kv(k_c, n_rep), attention._repeat_kv(v_c, n_rep)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32) / (cfg.hd ** 0.5)
+    s = layers.softcap(s, cfg.attn_softcap)
+    valid = (slot_pos >= 0) & (slot_pos <= pos[:, None]) & \
+        (slot_pos > pos[:, None] - (cfg.window or w))
+    s = jnp.where(valid[:, None, None, :], s, attention.NEG_INF)
+    wts = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", wts.astype(vv.dtype), vv)
+    out = layers.linear(p["wo"], o.reshape(b, 1, cfg.n_heads * cfg.hd))
+    return out, {"k": k_c, "v": v_c, "slot_pos": slot_pos}
+
+
+def decode_step(params: dict, cache: dict, tokens: jax.Array, pos: jax.Array,
+                cfg: LMConfig, mesh=None):
+    """One token: tokens (B, 1), pos (B,). Returns (logits (B, V), new cache)."""
+    assert not cfg.encoder_only, "encoder-only archs have no decode step"
+    x = layers.embed(params["embed"], tokens,
+                     scale_by_dim=cfg.scale_embed).astype(cfg.compute_dtype)
+
+    new_cache = {}
+
+    def scan_body(x, xs):
+        gp, gc = xs
+        ncs = {}
+        for j, kind in enumerate(cfg.pattern):
+            x, nc = _block_decode(kind, gp[f"b{j}"], x,
+                                  jax.tree.map(lambda t: t, gc[f"b{j}"]),
+                                  pos, cfg, mesh)
+            ncs[f"b{j}"] = nc
+        return x, ncs
+
+    group_cache = {k: cache[k] for k in cache if k.startswith("b")}
+    x, stacked_new = jax.lax.scan(scan_body, x,
+                                  (params["layers"], group_cache))
+    new_cache.update(stacked_new)
+    for j, kind in enumerate(cfg.tail_pattern):
+        x, nc = _block_decode(kind, params[f"tail{j}"], x, cache[f"tail{j}"],
+                              pos, cfg, mesh)
+        new_cache[f"tail{j}"] = nc
+
+    x = layers.rmsnorm(params["final_norm"], x)
+    if cfg.tie_embeddings:
+        logits = layers.unembed(params["embed"], x)
+    else:
+        logits = layers.linear(params["head"], x)
+    logits = layers.softcap(logits.astype(jnp.float32), cfg.final_softcap)
+    return logits[:, 0], new_cache
+
+
+# ===========================================================================
+# Input specs (dry-run stand-ins; no allocation)
+# ===========================================================================
+
+SHAPES = {
+    "train_4k": dict(kind="train", seq=4096, batch=256),
+    "prefill_32k": dict(kind="prefill", seq=32768, batch=32),
+    "decode_32k": dict(kind="decode", seq=32768, batch=128),
+    "long_500k": dict(kind="decode", seq=524288, batch=1),
+}
+
+
+def batch_specs(cfg: LMConfig, shape_name: str, batch_override: int | None = None,
+                seq_override: int | None = None) -> dict:
+    """ShapeDtypeStruct stand-ins for the data batch of a given shape cell."""
+    sh = SHAPES[shape_name]
+    b = batch_override or sh["batch"]
+    s = seq_override or sh["seq"]
+    f32, i32 = jnp.float32, jnp.int32
+    if sh["kind"] in ("train", "prefill"):
+        if cfg.frontend == "audio_frames":
+            return {"frames": jax.ShapeDtypeStruct((b, s, cfg.frontend_dim), f32),
+                    "targets": jax.ShapeDtypeStruct((b, s), i32),
+                    "loss_mask": jax.ShapeDtypeStruct((b, s), i32)}
+        if cfg.frontend == "vision_patches":
+            return {"tokens": jax.ShapeDtypeStruct((b, s - cfg.n_patches), i32),
+                    "patches": jax.ShapeDtypeStruct(
+                        (b, cfg.n_patches, cfg.frontend_dim), f32)}
+        return {"tokens": jax.ShapeDtypeStruct((b, s), i32)}
+    # decode
+    return {"tokens": jax.ShapeDtypeStruct((b, 1), i32),
+            "pos": jax.ShapeDtypeStruct((b,), i32)}
+
+
+def batch_axes(cfg: LMConfig, shape_name: str) -> dict:
+    sh = SHAPES[shape_name]
+    if sh["kind"] in ("train", "prefill"):
+        if cfg.frontend == "audio_frames":
+            return {"frames": ("batch", "seq", None),
+                    "targets": ("batch", "seq"), "loss_mask": ("batch", "seq")}
+        if cfg.frontend == "vision_patches":
+            return {"tokens": ("batch", "seq"),
+                    "patches": ("batch", None, None)}
+        return {"tokens": ("batch", "seq")}
+    return {"tokens": ("batch", None), "pos": ("batch",)}

@@ -1,0 +1,249 @@
+"""The paper's SNNs: event input -> CIM hidden layer (KWN or NLD mode) ->
+LIF -> spike-count readout, with surrogate-gradient training (BPTT through
+lax.scan) and quantization-aware training for the twin-cell weight grid and
+the NLQ ramp.
+
+Inference runs through the macro simulator with the silicon noise models, so
+the accuracy benchmarks (Figs. 5b / 6c / 8) exercise the same mechanisms the
+chip measures: KWN top-K sparse V_mem updates + SNL/PRBS rescue + NLQ LUT,
+vs NLD dendritic nonlinearities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dendrite as dendrite_lib
+from repro.core import ima as ima_lib
+from repro.core import kwn as kwn_lib
+from repro.core import lif as lif_lib
+from repro.core import macro as macro_lib
+from repro.core import prbs as prbs_lib
+from repro.core import ternary as ternary_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class SNNConfig:
+    n_in: int
+    n_hidden: int = 128           # the macro's 128 columns
+    n_classes: int = 10
+    n_steps: int = 20
+    mode: str = "kwn"             # kwn | nld
+    k: int = 12                   # KWN winners
+    n_branches: int = 2           # NLD dendritic branches
+    activation: str = "quadratic" # NLD activation f()
+    code_bits: int = 5
+    mac_range: float = 24.0      # NLQ full scale, in *integer MAC* units
+    dend_range: float = 4.0      # NLD branch-MAC full scale (float units)
+    drive_gain: float = 0.25     # V_mem LSBs per unit drive
+    beta: float = 0.9
+    v_th1: float = 1.0
+    v_th2: float = 0.6
+    noise_amp: float = 0.05
+    use_snl: bool = True
+    train_nlq: bool = True        # NLQ-aware training (Fig. 6c)
+    weight_qat: bool = True       # twin-cell 3-bit QAT
+
+
+def init_params(cfg: SNNConfig, key: jax.Array) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    p: dict[str, Any] = {
+        "w_out": jax.random.normal(k3, (cfg.n_hidden, cfg.n_classes))
+        / jnp.sqrt(cfg.n_hidden),
+    }
+    if cfg.mode == "nld":
+        p["dend"] = dendrite_lib.dendrite_init(k1, cfg.n_in, cfg.n_hidden,
+                                               cfg.n_branches)
+    else:
+        p["w_hid"] = jax.random.normal(k1, (cfg.n_in, cfg.n_hidden)) \
+            / jnp.sqrt(cfg.n_in) * 3.0
+    return p
+
+
+def _nlq_cb(cfg: SNNConfig):
+    return ima_lib.nlq_codebook(cfg.code_bits, -cfg.mac_range, cfg.mac_range)
+
+
+def _act_cb(cfg: SNNConfig):
+    f = ima_lib.DENDRITE_ACTIVATIONS[cfg.activation]
+    return ima_lib.activation_codebook(cfg.code_bits, f, -cfg.dend_range,
+                                       cfg.dend_range)
+
+
+def _hidden_drive_train(p, spikes, cfg: SNNConfig):
+    """Differentiable (QAT/STE) hidden-layer drive for one time step.
+
+    The NLQ ramp digitizes the *integer* MAC (twin-cell units), so the float
+    MAC is divided by the per-column quantization scale before the STE ramp
+    and multiplied back after — the exact silicon dataflow."""
+    if cfg.mode == "nld":
+        f = ima_lib.DENDRITE_ACTIVATIONS[cfg.activation]
+        if cfg.train_nlq:
+            return dendrite_lib.dendrite_mac(p["dend"], spikes, f=f,
+                                             nl_cb=_act_cb(cfg), quantize=True)
+        return dendrite_lib.dendrite_mac(p["dend"], spikes, f=f)
+    w = p["w_hid"]
+    if cfg.weight_qat:
+        w = ternary_lib.quantize_weights_ste(w)
+    mac = spikes @ w
+    if cfg.train_nlq:
+        scale = jax.lax.stop_gradient(
+            ternary_lib.quantize_weights_3bit(p["w_hid"])[1][0])  # (N,)
+        mac = ima_lib.ima_quantize_ste(mac / scale, _nlq_cb(cfg)) * scale
+    return mac
+
+
+def forward_train(p, events, cfg: SNNConfig):
+    """BPTT forward: events (B, T, N_in) -> logits (B, classes).
+
+    Training uses dense LIF updates (top-K masking is applied at inference;
+    training with the dense objective + QAT is how the silicon was trained)."""
+    b = events.shape[0]
+    lif_p = lif_lib.LIFParams(beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
+                              noise_amp=0.0)
+
+    def step(carry, ev):
+        v, spk_acc = carry
+        drive = _hidden_drive_train(p, ev, cfg) * cfg.drive_gain
+        v = cfg.beta * v + drive
+        s = lif_lib.spike_fn(v, jnp.asarray(cfg.v_th1))
+        v = jnp.where(s > 0, 0.0, v)
+        return (v, spk_acc + s), None
+
+    init = (jnp.zeros((b, cfg.n_hidden)), jnp.zeros((b, cfg.n_hidden)))
+    (v, counts), _ = jax.lax.scan(step, init, jnp.moveaxis(events, 1, 0))
+    return (counts / cfg.n_steps) @ p["w_out"]
+
+
+def _quantized_weights(p, cfg: SNNConfig):
+    w_int, scale = ternary_lib.quantize_weights_3bit(p["w_hid"])
+    return w_int, scale
+
+
+def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
+                    mode: str | None = None, k: int | None = None,
+                    use_snl: bool | None = None,
+                    noise: ima_lib.IMANoiseModel | None = None):
+    """Inference through the macro simulator (KWN Eq. 1 / NLD Eq. 2).
+
+    Returns (logits, telemetry) where telemetry carries adc_steps per time
+    step (early-stop latency), LIF update counts, and SOP counts for the
+    energy model.
+    """
+    mode = mode or cfg.mode
+    k = k or cfg.k
+    use_snl = cfg.use_snl if use_snl is None else use_snl
+    b = events.shape[0]
+    mcfg = macro_lib.CIMMacroConfig(
+        code_bits=cfg.code_bits,
+        mac_range=cfg.mac_range if mode == "kwn" else cfg.dend_range,
+        ima_noise=noise)
+    lif_p = lif_lib.LIFParams(beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
+                              noise_amp=cfg.noise_amp if use_snl else 0.0)
+    if mode == "kwn":
+        w_int, scale = _quantized_weights(p, cfg)
+        nlq = _nlq_cb(cfg)
+
+    def step(carry, inp):
+        state, spk_acc, tele = carry
+        ev, kk = inp
+        if mode == "nld":
+            drive = macro_lib.nld_forward(ev, p["dend"], mcfg,
+                                          activation=cfg.activation,
+                                          quantize=True)
+            mask = None
+            adc_steps = jnp.full((b,), nlq_steps_full(cfg), jnp.int32)
+            n_upd = jnp.full((b,), cfg.n_hidden, jnp.int32)
+        else:
+            mac_int = macro_lib.cim_mac(ev, w_int, mcfg, key=kk)  # int units
+            if noise is not None:
+                codes = ima_lib.ima_convert_noisy(mac_int, nlq, kk, noise)
+                mac_q = ima_lib.ima_reconstruct(codes, nlq)
+            else:
+                mac_q = ima_lib.ima_quantize(mac_int, nlq)
+            res = kwn_lib.kwn_select(mac_q, k, nlq)
+            drive = (mac_q * scale[0]) * res.mask                 # LUT x scale
+            mask = res.mask
+            adc_steps = res.adc_steps
+            n_upd = jnp.full((b,), k, jnp.int32)
+        state, s = lif_lib.lif_step(
+            state, drive * cfg.drive_gain, lif_p,
+            update_mask=mask, use_snl=use_snl and mode == "kwn")
+        sops = jnp.sum(jnp.abs(ev), axis=-1) * cfg.n_hidden
+        tele = {
+            "adc_steps": tele["adc_steps"] + adc_steps.astype(jnp.float32),
+            "lif_updates": tele["lif_updates"] + n_upd.astype(jnp.float32),
+            "sops": tele["sops"] + sops,
+        }
+        return (state, spk_acc + s, tele), None
+
+    tele0 = {"adc_steps": jnp.zeros((b,)), "lif_updates": jnp.zeros((b,)),
+             "sops": jnp.zeros((b,))}
+    init = (lif_lib.lif_init((b, cfg.n_hidden)), jnp.zeros((b, cfg.n_hidden)),
+            tele0)
+    keys = jax.random.split(key, cfg.n_steps)
+    (state, counts, tele), _ = jax.lax.scan(
+        step, init, (jnp.moveaxis(events, 1, 0), keys))
+    logits = (counts / cfg.n_steps) @ p["w_out"]
+    tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)  # per-step means
+    return logits, tele
+
+
+def nlq_steps_full(cfg: SNNConfig) -> int:
+    return 2 ** cfg.code_bits - 1
+
+
+# ---------------------------------------------------------------------------
+# Training
+# ---------------------------------------------------------------------------
+
+def loss_fn(p, events, labels, cfg: SNNConfig):
+    logits = forward_train(p, events, cfg)
+    lse = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lse, labels[:, None], 1))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(p, opt_m, events, labels, cfg: SNNConfig, lr):
+    loss, g = jax.value_and_grad(loss_fn)(p, events, labels, cfg)
+    opt_m = jax.tree.map(lambda m, gg: 0.9 * m + gg, opt_m, g)
+    p = jax.tree.map(lambda pp, m: pp - lr * m, p, opt_m)
+    return p, opt_m, loss
+
+
+def train(cfg: SNNConfig, dataset, n_steps: int = 300, batch: int = 64,
+          seed: int = 0, lr: float = 0.05):
+    """Plain SGD-momentum.  NOTE: the quadratic-NLD cell degrades if trained
+    far past convergence (ramp-knee gradient spikes), so callers use per-cell
+    step budgets (benchmarks/_snn_cache.py) instead of decay/clipping — both
+    were tried and slowed the well-behaved cells more than they helped
+    (recorded in EXPERIMENTS.md)."""
+    key = jax.random.PRNGKey(seed)
+    p = init_params(cfg, key)
+    opt_m = jax.tree.map(jnp.zeros_like, p)
+    losses = []
+    for i in range(n_steps):
+        key, sub = jax.random.split(key)
+        ev, lab = dataset.sample(sub, batch)
+        p, opt_m, loss = train_step(p, opt_m, ev, lab, cfg,
+                                    jnp.float32(lr))
+        losses.append(float(loss))
+    return p, losses
+
+
+def evaluate(p, cfg: SNNConfig, dataset, key: jax.Array, n_batches: int = 10,
+             batch: int = 128, **silicon_kwargs):
+    accs, teles = [], []
+    for i in range(n_batches):
+        key, k1, k2 = jax.random.split(key, 3)
+        ev, lab = dataset.sample(k1, batch)
+        logits, tele = forward_silicon(p, ev, cfg, k2, **silicon_kwargs)
+        accs.append(float(jnp.mean(jnp.argmax(logits, -1) == lab)))
+        teles.append(tele)
+    tele = jax.tree.map(lambda *xs: float(jnp.mean(jnp.stack(xs))), *teles)
+    return sum(accs) / len(accs), tele

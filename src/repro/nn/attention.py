@@ -1,0 +1,309 @@
+"""GQA attention: chunked online-softmax for long-context train/prefill,
+cache-based decode (split-KV friendly), local sliding-window variant,
+logit softcap (gemma2), QKV bias (qwen2.5).
+
+Memory behaviour: training/prefill attention is *blockwise* — a lax.scan over
+KV chunks carrying (acc, row-max, row-sum) — so the (S, S) score matrix never
+materializes; peak activation is O(S * chunk).  For sliding-window layers the
+chunk equals the window and only the diagonal + previous block are computed
+(flops-optimal for w <= chunk).
+
+Decode attends a single query against the full cache; with the cache sequence
+dim sharded over "model" (dist rules: "cache_seq"), GSPMD turns the softmax
+into the FlashDecoding-style split-KV pattern (partial max/sum + all-reduce).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+from repro.nn.module import ParamSpec
+
+NEG_INF = -1e30
+
+
+def attention_specs(d_model: int, n_heads: int, n_kv: int, head_dim: int,
+                    qkv_bias: bool = False, dtype=jnp.float32) -> dict:
+    return {
+        "wq": layers.linear_spec(d_model, n_heads * head_dim, "embed", "heads",
+                                 bias=qkv_bias, dtype=dtype),
+        "wk": layers.linear_spec(d_model, n_kv * head_dim, "embed", "kv_heads",
+                                 bias=qkv_bias, dtype=dtype),
+        "wv": layers.linear_spec(d_model, n_kv * head_dim, "embed", "kv_heads",
+                                 bias=qkv_bias, dtype=dtype),
+        "wo": layers.linear_spec(n_heads * head_dim, d_model, "heads", "embed",
+                                 dtype=dtype),
+    }
+
+
+def _split_heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def _repeat_kv(k, n_rep):
+    if n_rep == 1:
+        return k
+    return jnp.repeat(k, n_rep, axis=-2)
+
+
+def _chunk_attn_step(q, k_c, v_c, mask, softcap, scale):
+    """q: (B, cq, H, hd); k_c/v_c: (B, ck, H, hd); mask: (cq, ck) or None.
+    Returns unnormalized (scores_exp @ v, row_max, row_sum)."""
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k_c).astype(jnp.float32) * scale
+    s = layers.softcap(s, softcap)
+    if mask is not None:
+        s = jnp.where(mask[None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                               # (B,H,cq)
+    p = jnp.exp(s - m[..., None])
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p.astype(v_c.dtype), v_c)
+    return o, m, l
+
+
+def blockwise_attention(q, k, v, *, causal: bool = True,
+                        window: int | None = None,
+                        softcap: float | None = None,
+                        chunk: int = 1024) -> jax.Array:
+    """q,k,v: (B, S, H, hd) (kv already head-repeated). Returns (B, S, H, hd)."""
+    b, s, h, hd = q.shape
+    scale = 1.0 / (hd ** 0.5)
+
+    if window is not None and window < s:
+        return _sliding_window_attention(q, k, v, window=window,
+                                         softcap=softcap, scale=scale)
+
+    if s <= chunk:
+        mask = None
+        if causal:
+            mask = jnp.tril(jnp.ones((s, s), bool))
+        o, m, l = _chunk_attn_step(q, k, v, mask, softcap, scale)
+        return o / jnp.transpose(l, (0, 2, 1))[..., None].astype(o.dtype)
+
+    n_chunks = s // chunk
+    assert s % chunk == 0, (s, chunk)
+    qc = q.reshape(b, n_chunks, chunk, h, hd)
+    kc = k.reshape(b, n_chunks, chunk, h, hd)
+    vc = v.reshape(b, n_chunks, chunk, h, hd)
+
+    q_pos = jnp.arange(chunk)
+
+    def outer(qi, q_blk):
+        """Online softmax over all KV chunks for one Q chunk."""
+        @functools.partial(jax.checkpoint,
+                           policy=jax.checkpoint_policies.nothing_saveable)
+        def inner(carry, kv):
+            acc, m_run, l_run = carry
+            kj, (k_blk, v_blk) = kv
+            if causal:
+                # whole-block relationship: kj < qi full, kj == qi diagonal,
+                # kj > qi masked out entirely.
+                pos_mask = (qi * chunk + q_pos[:, None]) >= (kj * chunk + q_pos[None, :])
+            else:
+                pos_mask = jnp.ones((chunk, chunk), bool)
+            o, m, l = _chunk_attn_step(q_blk, k_blk, v_blk, pos_mask, softcap,
+                                       scale)
+            m_new = jnp.maximum(m_run, m)
+            alpha = jnp.exp(m_run - m_new)
+            beta = jnp.exp(m - m_new)
+            l_new = l_run * alpha + l * beta
+            acc = (acc * jnp.transpose(alpha, (0, 2, 1))[..., None].astype(acc.dtype)
+                   + o * jnp.transpose(beta, (0, 2, 1))[..., None].astype(o.dtype))
+            return (acc, m_new, l_new), None
+
+        init = (jnp.zeros((b, chunk, h, hd), q.dtype),
+                jnp.full((b, h, chunk), NEG_INF, jnp.float32),
+                jnp.zeros((b, h, chunk), jnp.float32))
+        (acc, m_run, l_run), _ = jax.lax.scan(
+            inner, init, (jnp.arange(n_chunks), (jnp.moveaxis(kc, 1, 0),
+                                                 jnp.moveaxis(vc, 1, 0))))
+        return acc / jnp.transpose(l_run, (0, 2, 1))[..., None].astype(acc.dtype)
+
+    out = jax.lax.map(jax.checkpoint(lambda args: outer(*args)),
+                      (jnp.arange(n_chunks), jnp.moveaxis(qc, 1, 0)))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+def _sliding_window_attention(q, k, v, *, window: int, softcap, scale):
+    """Exact sliding-window causal attention for w <= block: each block
+    attends to itself (causal) + the previous block (banded)."""
+    b, s, h, hd = q.shape
+    blk = window
+    assert s % blk == 0, (s, blk)
+    n = s // blk
+    qb = q.reshape(b, n, blk, h, hd)
+    kb = k.reshape(b, n, blk, h, hd)
+    vb = v.reshape(b, n, blk, h, hd)
+    k_prev = jnp.concatenate([jnp.zeros_like(kb[:, :1]), kb[:, :-1]], axis=1)
+    v_prev = jnp.concatenate([jnp.zeros_like(vb[:, :1]), vb[:, :-1]], axis=1)
+    prev_valid = jnp.arange(n) > 0                        # block 0 has no prev
+
+    i = jnp.arange(blk)
+    # diagonal block: causal within block
+    diag_mask = i[:, None] >= i[None, :]
+    # previous block: position q_i attends k_j when (q_i + blk - k_j) < window
+    prev_mask = (i[:, None] + blk - i[None, :]) < window
+
+    @jax.checkpoint
+    def per_block(args):
+        q_blk, k_d, v_d, k_p, v_p, has_prev = args
+        o1, m1, l1 = _chunk_attn_step(q_blk, k_d, v_d, diag_mask, softcap, scale)
+        pm = prev_mask & has_prev
+        o2, m2, l2 = _chunk_attn_step(q_blk, k_p, v_p, pm, softcap, scale)
+        m = jnp.maximum(m1, m2)
+        a1, a2 = jnp.exp(m1 - m), jnp.exp(m2 - m)
+        l = l1 * a1 + l2 * a2
+        o = (o1 * jnp.transpose(a1, (0, 2, 1))[..., None].astype(o1.dtype)
+             + o2 * jnp.transpose(a2, (0, 2, 1))[..., None].astype(o2.dtype))
+        return o / jnp.transpose(l, (0, 2, 1))[..., None].astype(o.dtype)
+
+    out = jax.lax.map(per_block, (jnp.moveaxis(qb, 1, 0), jnp.moveaxis(kb, 1, 0),
+                                  jnp.moveaxis(vb, 1, 0), jnp.moveaxis(k_prev, 1, 0),
+                                  jnp.moveaxis(v_prev, 1, 0), prev_valid))
+    return jnp.moveaxis(out, 0, 1).reshape(b, s, h, hd)
+
+
+# ---------------------------------------------------------------------------
+# Full layer forward (train/prefill)
+# ---------------------------------------------------------------------------
+
+def mha(p: dict, x: jax.Array, positions: jax.Array, *, n_heads: int,
+        n_kv: int, head_dim: int, causal: bool = True,
+        window: int | None = None, attn_softcap: float | None = None,
+        rope_theta: float = 10000.0, chunk: int = 1024,
+        use_rope: bool = True, return_kv: bool = False):
+    q = _split_heads(layers.linear(p["wq"], x), n_heads, head_dim)
+    k = _split_heads(layers.linear(p["wk"], x), n_kv, head_dim)
+    v = _split_heads(layers.linear(p["wv"], x), n_kv, head_dim)
+    if use_rope:
+        q = layers.rope(q, positions, rope_theta)
+        k = layers.rope(k, positions, rope_theta)
+    kv = (k, v)
+    n_rep = n_heads // n_kv
+    k, v = _repeat_kv(k, n_rep), _repeat_kv(v, n_rep)
+    o = blockwise_attention(q, k, v, causal=causal, window=window,
+                            softcap=attn_softcap, chunk=chunk)
+    out = layers.linear(p["wo"], o.reshape(*x.shape[:-1], n_heads * head_dim))
+    if return_kv:
+        return out, kv
+    return out
+
+
+def prefill_cache_from_kv(k: jax.Array, v: jax.Array,
+                          window: int | None) -> dict:
+    """Turn prefill-computed (roped) K/V into the decode cache layout.
+
+    Global layers: the cache is just (k, v).  Local layers: keep the last
+    ``window`` positions arranged in ring-buffer order (slot = pos % window)
+    with their absolute positions, matching _ring_decode."""
+    s = k.shape[1]
+    if window is None or window >= s:
+        return {"k": k, "v": v}
+    pos = jnp.arange(s - window, s)
+    slots = pos % window
+    inv = jnp.argsort(slots)
+    k_ring = k[:, s - window:][:, inv]
+    v_ring = v[:, s - window:][:, inv]
+    slot_pos = jnp.broadcast_to(pos[inv], (k.shape[0], window)).astype(jnp.int32)
+    return {"k": k_ring, "v": v_ring, "slot_pos": slot_pos}
+
+
+def mha_decode_quant(p: dict, x: jax.Array, cache: dict, pos: jax.Array, *,
+                     n_heads: int, n_kv: int, head_dim: int,
+                     kv_quant: str, attn_softcap: float | None = None,
+                     rope_theta: float = 10000.0) -> tuple[jax.Array, dict]:
+    """Decode against a quantized KV cache (§Perf: NLQ-for-KV, int8/int4).
+
+    Payload + per-(pos, head) scale are stored; K/V dequantize to bf16 right
+    before the attention einsums.  HBM traffic for the cache drops 2x/4x —
+    the dominant term of the decode roofline."""
+    from repro.nn import kvq
+    b = x.shape[0]
+    s_max = cache["k"].shape[1]
+    q = _split_heads(layers.linear(p["wq"], x), n_heads, head_dim)
+    k_new = _split_heads(layers.linear(p["wk"], x), n_kv, head_dim)
+    v_new = _split_heads(layers.linear(p["wv"], x), n_kv, head_dim)
+    q = layers.rope(q, pos[:, None], rope_theta)
+    k_new = layers.rope(k_new, pos[:, None], rope_theta)
+
+    kq_new, ks_new = kvq.quantize(k_new, kv_quant)     # (B,1,G,hs),(B,1,G,1)
+    vq_new, vs_new = kvq.quantize(v_new, kv_quant)
+    onehot = jax.nn.one_hot(pos, s_max, dtype=jnp.float32)  # (B,S)
+    oh_i = onehot[..., None, None]
+
+    def upd(buf, new):
+        return (buf.astype(jnp.float32) * (1.0 - oh_i)
+                + oh_i * new.astype(jnp.float32)).astype(buf.dtype)
+
+    cache = {"k": upd(cache["k"], kq_new), "v": upd(cache["v"], vq_new),
+             "k_scale": upd(cache["k_scale"], ks_new),
+             "v_scale": upd(cache["v_scale"], vs_new)}
+
+    kk = kvq.dequantize(cache["k"], cache["k_scale"], kv_quant)
+    vv = kvq.dequantize(cache["v"], cache["v_scale"], kv_quant)
+    n_rep = n_heads // n_kv
+    kk, vv = _repeat_kv(kk, n_rep), _repeat_kv(vv, n_rep)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32)
+    s = s / (head_dim ** 0.5)
+    s = layers.softcap(s, attn_softcap)
+    span = jnp.arange(s_max)
+    valid = span[None, :] <= pos[:, None]
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(vv.dtype), vv)
+    out = layers.linear(p["wo"], o.reshape(b, 1, n_heads * head_dim))
+    return out, cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+class KVCache(NamedTuple):
+    k: jax.Array          # (B, S_max, n_kv, hd)
+    v: jax.Array          # (B, S_max, n_kv, hd)
+
+
+def mha_decode(p: dict, x: jax.Array, cache: KVCache, pos: jax.Array, *,
+               n_heads: int, n_kv: int, head_dim: int,
+               window: int | None = None,
+               attn_softcap: float | None = None,
+               rope_theta: float = 10000.0,
+               use_rope: bool = True) -> tuple[jax.Array, KVCache]:
+    """x: (B, 1, D); pos: (B,) current length. Returns (out, new_cache)."""
+    b = x.shape[0]
+    s_max = cache.k.shape[1]
+    q = _split_heads(layers.linear(p["wq"], x), n_heads, head_dim)   # (B,1,H,hd)
+    k_new = _split_heads(layers.linear(p["wk"], x), n_kv, head_dim)  # (B,1,G,hd)
+    v_new = _split_heads(layers.linear(p["wv"], x), n_kv, head_dim)
+    if use_rope:
+        q = layers.rope(q, pos[:, None], rope_theta)
+        k_new = layers.rope(k_new, pos[:, None], rope_theta)
+
+    # Scatter the new KV at each row's position (one-hot to stay GSPMD-friendly
+    # on a sequence-sharded cache: a matmul-like update, no gather/DUS).
+    onehot = jax.nn.one_hot(pos, s_max, dtype=cache.k.dtype)          # (B,S)
+    k_cache = cache.k * (1.0 - onehot[..., None, None]) + \
+        onehot[..., None, None] * k_new
+    v_cache = cache.v * (1.0 - onehot[..., None, None]) + \
+        onehot[..., None, None] * v_new
+
+    n_rep = n_heads // n_kv
+    kk = _repeat_kv(k_cache, n_rep)                                   # (B,S,H,hd)
+    vv = _repeat_kv(v_cache, n_rep)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, kk).astype(jnp.float32)
+    s = s / (head_dim ** 0.5)
+    s = layers.softcap(s, attn_softcap)
+    span = jnp.arange(s_max)
+    valid = span[None, :] <= pos[:, None]                             # causal fill
+    if window is not None:
+        valid = valid & (span[None, :] > pos[:, None] - window)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqk,bkhd->bqhd", w.astype(vv.dtype), vv)
+    out = layers.linear(p["wo"], o.reshape(b, 1, n_heads * head_dim))
+    return out, KVCache(k_cache, v_cache)

@@ -1,0 +1,54 @@
+"""KV-cache quantization — the paper's NLQ idea (C2/C6) applied to serving.
+
+The macro digitizes MACs to 5 bits over an 8-bit range because activations
+are tightly distributed; decode-time K/V activations have the same property,
+so the same move (low-bit codes + per-vector scale "LUT") cuts the
+memory-bound decode term by 2x (int8) or 4x (int4, two nibbles per byte).
+
+Symmetric per-(position, head) scaling: q = round(x / s), s = max|x| / Q.
+int4 packs adjacent head-dim pairs into one uint8.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize(x: jax.Array, mode: str):
+    """x: (..., hd) -> (payload, scale (..., 1))."""
+    scale = jnp.max(jnp.abs(x), axis=-1, keepdims=True).astype(jnp.float32)
+    if mode == "int8":
+        s = jnp.maximum(scale, 1e-8) / 127.0
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -127, 127
+                     ).astype(jnp.int8)
+        return q, s
+    if mode == "int4":
+        s = jnp.maximum(scale, 1e-8) / 7.0
+        q = jnp.clip(jnp.round(x.astype(jnp.float32) / s), -7, 7
+                     ).astype(jnp.int8)
+        hi = q[..., 1::2]
+        lo = q[..., 0::2]
+        packed = ((hi + 8) << 4 | (lo + 8)).astype(jnp.uint8)
+        return packed, s
+    raise ValueError(mode)
+
+
+def dequantize(q: jax.Array, scale: jax.Array, mode: str, dtype=jnp.bfloat16):
+    if mode == "int8":
+        return (q.astype(jnp.float32) * scale).astype(dtype)
+    if mode == "int4":
+        lo = (q & 0xF).astype(jnp.int32) - 8
+        hi = (q >> 4).astype(jnp.int32) - 8
+        out = jnp.stack([lo, hi], axis=-1).reshape(*q.shape[:-1],
+                                                   q.shape[-1] * 2)
+        return (out.astype(jnp.float32) * scale).astype(dtype)
+    raise ValueError(mode)
+
+
+def storage_shape(hd: int, mode: str) -> int:
+    return hd // 2 if mode == "int4" else hd
+
+
+def storage_dtype(mode: str):
+    return jnp.uint8 if mode == "int4" else jnp.int8

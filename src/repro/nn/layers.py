@@ -1,0 +1,116 @@
+"""Shared layers: linear/embedding/norm/rope + the CIM-mode linear (paper C1/C2
+applied to LM projections)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ima as ima_lib
+from repro.core import ternary as ternary_lib
+from repro.nn.module import ParamSpec
+
+
+# --- param-spec builders ----------------------------------------------------
+
+def linear_spec(d_in: int, d_out: int, in_axis: str | None, out_axis: str | None,
+                bias: bool = False, dtype=jnp.float32) -> dict:
+    s = {"w": ParamSpec((d_in, d_out), (in_axis, out_axis), dtype)}
+    if bias:
+        s["b"] = ParamSpec((d_out,), (out_axis,), dtype, init="zeros")
+    return s
+
+
+def embed_spec(vocab: int, d: int, dtype=jnp.float32) -> dict:
+    return {"table": ParamSpec((vocab, d), ("vocab", "embed"), dtype,
+                               init="embed")}
+
+
+def norm_spec(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": ParamSpec((d,), (None,), dtype, init="zeros")}
+
+
+# --- forward ops ------------------------------------------------------------
+
+def linear(p: dict, x: jax.Array) -> jax.Array:
+    y = x @ p["w"].astype(x.dtype)
+    if "b" in p:
+        y = y + p["b"].astype(x.dtype)
+    return y
+
+
+def cim_linear(p: dict, x: jax.Array, code_bits: int = 5,
+               nlq_gamma: float = 2.0) -> jax.Array:
+    """CIM-mode linear: ternary twin-cell weights (QAT STE) + NLQ activations.
+
+    This is the paper's macro applied to an LM projection: weights fake-quant
+    to the [-3,3] twin-cell grid, outputs through the NLQ ramp (companding
+    codebook sized to the running activation scale).
+    """
+    w_q = ternary_lib.quantize_weights_ste(p["w"].astype(jnp.float32))
+    y = x.astype(jnp.float32) @ w_q
+    if "b" in p:
+        y = y + p["b"].astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(jax.lax.stop_gradient(y))), 1e-3)
+    cb = ima_lib.nlq_codebook(code_bits, -1.0, 1.0, nlq_gamma)
+    y = ima_lib.ima_quantize_ste(y / scale, cb) * scale
+    return y.astype(x.dtype)
+
+
+def rmsnorm(p: dict, x: jax.Array, eps: float = 1e-6,
+            plus_one: bool = True) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    scale = p["scale"].astype(jnp.float32)
+    scale = 1.0 + scale if plus_one else scale
+    return (xf * scale).astype(dt)
+
+
+def embed(p: dict, ids: jax.Array, scale_by_dim: bool = False) -> jax.Array:
+    table = p["table"]
+    y = jnp.take(table, ids, axis=0)
+    if scale_by_dim:
+        y = y * jnp.sqrt(jnp.asarray(table.shape[-1], y.dtype))
+    return y
+
+
+def unembed(p: dict, x: jax.Array) -> jax.Array:
+    return x @ p["table"].T.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float | None) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# --- rotary position embedding ----------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10000.0) -> jax.Array:
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (..., S, 1, half)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+# --- activations --------------------------------------------------------------
+
+def squared_relu(x):
+    r = jnp.maximum(x, 0.0)
+    return r * r
+
+
+ACTIVATIONS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+    "squared_relu": squared_relu,
+}

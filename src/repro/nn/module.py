@@ -1,0 +1,150 @@
+"""Param-spec micro-framework: shapes + logical sharding axes, no magic.
+
+Models are pure functions over nested dicts of arrays.  ``param_specs``
+builders return the same nested structure holding :class:`ParamSpec` leaves;
+from that single source of truth we derive
+  * ``materialize``  — real initialized arrays (smoke tests / real training),
+  * ``abstract``     — ShapeDtypeStruct tree (dry-run: no allocation),
+  * ``shardings``    — NamedSharding tree via logical-axis rules with
+                       divisibility fallback (a mesh axis that does not divide
+                       the dim is dropped, never errors — this is what keeps
+                       batch=1 / kv_heads=1 / odd-vocab cases legal).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]          # logical axis name per dim
+    dtype: Any = jnp.float32
+    init: str = "normal"                  # normal | zeros | ones | embed
+    scale: float | None = None            # None -> fan-in 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def _init_leaf(spec: ParamSpec, key: jax.Array, dtype_override=None) -> jax.Array:
+    dtype = dtype_override or spec.dtype
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, dtype)
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, dtype)
+    if spec.init == "embed":
+        return (jax.random.normal(key, spec.shape) * (spec.scale or 0.02)).astype(dtype)
+    fan_in = spec.shape[-2] if len(spec.shape) >= 2 else spec.shape[-1]
+    scale = spec.scale if spec.scale is not None else 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.normal(key, spec.shape) * scale).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def materialize(specs: Tree, key: jax.Array, dtype=None) -> Tree:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(
+        treedef, [_init_leaf(s, k, dtype) for s, k in zip(leaves, keys)])
+
+
+def abstract(specs: Tree, dtype=None) -> Tree:
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, dtype or s.dtype),
+        specs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Logical axis -> mesh sharding
+# ---------------------------------------------------------------------------
+
+DEFAULT_RULES: dict[str, tuple[str, ...] | str | None] = {
+    "batch": ("pod", "data"),
+    "seq": None,
+    "embed": None,
+    "vocab": "model",
+    "heads": "model",        # fused n_heads*head_dim projection dim
+    "kv_heads": "model",
+    "ffn": "model",
+    "experts": "model",
+    "expert_in": None,
+    "expert_ffn": None,
+    "cache_seq": "model",    # decode KV cache sequence dim (split-KV)
+    "cache_heads": None,
+    "conv": None,
+    "state": None,
+    "classes": "model",
+}
+
+
+def _mesh_axes_for(logical: str | None, rules: dict, mesh: Mesh) -> tuple[str, ...]:
+    if logical is None:
+        return ()
+    r = rules.get(logical, None)
+    if r is None:
+        return ()
+    axes = (r,) if isinstance(r, str) else tuple(r)
+    return tuple(a for a in axes if a in mesh.shape)
+
+
+def partition_spec(shape: tuple[int, ...], axes: tuple[str | None, ...],
+                   mesh: Mesh, rules: dict | None = None) -> P:
+    """Build a PartitionSpec, dropping any mesh axis that does not divide the
+    dim (GSPMD refuses uneven in/out shardings) and never using a mesh axis
+    twice."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    used: set[str] = set()
+    parts = []
+    for dim, logical in zip(shape, axes):
+        mesh_axes = _mesh_axes_for(logical, rules, mesh)
+        chosen: list[str] = []
+        prod = 1
+        for a in mesh_axes:
+            if a in used:
+                continue
+            if dim % (prod * mesh.shape[a]) == 0:
+                chosen.append(a)
+                prod *= mesh.shape[a]
+        used.update(chosen)
+        if not chosen:
+            parts.append(None)
+        elif len(chosen) == 1:
+            parts.append(chosen[0])
+        else:
+            parts.append(tuple(chosen))
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def shardings(specs: Tree, mesh: Mesh, rules: dict | None = None) -> Tree:
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, partition_spec(s.shape, s.axes, mesh, rules)),
+        specs, is_leaf=is_spec)
+
+
+def shardings_like(tree: Tree, axes_tree: Tree, mesh: Mesh,
+                   rules: dict | None = None) -> Tree:
+    """Shardings for an arbitrary array tree given a parallel tree of logical
+    axis tuples (used for caches / batches)."""
+    return jax.tree.map(
+        lambda x, ax: NamedSharding(
+            mesh, partition_spec(tuple(x.shape), ax, mesh, rules)),
+        tree, axes_tree, is_leaf=lambda x: hasattr(x, "shape"))
+
+
+def count_params(specs: Tree) -> int:
+    leaves = jax.tree.leaves(specs, is_leaf=is_spec)
+    return sum(math.prod(s.shape) for s in leaves)

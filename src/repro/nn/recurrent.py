@@ -1,0 +1,304 @@
+"""Recurrent blocks: xLSTM (chunked mLSTM + sLSTM) and Griffin's RG-LRU.
+
+mLSTM — matrix-memory cell with exponential gating, implemented *chunkwise*
+(FLA-style): intra-chunk attention in log-gate space + inter-chunk recurrent
+state (C, n, m) with max-stabilizers, so training never materializes per-step
+d x d states and the sequential depth is S/chunk, not S.
+
+sLSTM — scalar-memory cell with h_{t-1} feedback in the gates (true
+recurrence; not parallelizable) — lax.scan over time with stabilized
+exponential gating.
+
+RG-LRU — Griffin's gated linear recurrence; diagonal -> jax.lax.associative_scan
+over time (parallel depth log S, the TPU-native realization).  Sub-quadratic,
+which is why recurrentgemma/xlstm are the long_500k architectures.
+
+All cells expose a single-step form for decode.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.nn import layers
+from repro.nn.module import ParamSpec
+
+NEG_INF = -1e30
+
+
+# ===========================================================================
+# mLSTM (xLSTM matrix cell)
+# ===========================================================================
+
+def mlstm_specs(d_model: int, n_heads: int, dtype=jnp.float32) -> dict:
+    hd = d_model // n_heads
+    return {
+        "wq": layers.linear_spec(d_model, d_model, "embed", "heads", dtype=dtype),
+        "wk": layers.linear_spec(d_model, d_model, "embed", "heads", dtype=dtype),
+        "wv": layers.linear_spec(d_model, d_model, "embed", "heads", dtype=dtype),
+        "wi": layers.linear_spec(d_model, n_heads, "embed", None, dtype=dtype),
+        "wf": layers.linear_spec(d_model, n_heads, "embed", None, dtype=dtype),
+        "wo_gate": layers.linear_spec(d_model, d_model, "embed", "heads", dtype=dtype),
+        "wo": layers.linear_spec(d_model, d_model, "heads", "embed", dtype=dtype),
+    }
+
+
+class MLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, hd, hd) stabilized matrix memory
+    n: jax.Array   # (B, H, hd) stabilized normalizer
+    m: jax.Array   # (B, H) log-stabilizer
+
+
+def mlstm_init_state(b: int, n_heads: int, hd: int, dtype=jnp.float32):
+    return MLSTMState(jnp.zeros((b, n_heads, hd, hd), dtype),
+                      jnp.zeros((b, n_heads, hd), dtype),
+                      jnp.full((b, n_heads), -1e9, dtype))
+
+
+def _mlstm_chunk(q, k, v, log_f, log_i, state: MLSTMState):
+    """One chunk. q,k,v: (B, W, H, hd); log_f/log_i: (B, W, H)."""
+    b, w, h, hd = q.shape
+    scale = 1.0 / math.sqrt(hd)
+    a = jnp.cumsum(log_f, axis=1)                       # (B,W,H) inclusive
+    total_a = a[:, -1]                                  # (B,H)
+
+    # intra-chunk decay matrix: D[t,s] = a_t - a_s + log_i_s  (s <= t)
+    d_mat = (a[:, :, None, :] - a[:, None, :, :]
+             + log_i[:, None, :, :])                    # (B,T,S,H)
+    tri = jnp.tril(jnp.ones((w, w), bool))
+    d_mat = jnp.where(tri[None, :, :, None], d_mat, NEG_INF)
+
+    m_intra = jnp.max(d_mat, axis=2)                    # (B,T,H)
+    m_inter = state.m[:, None, :] + a                   # (B,T,H)
+    m_t = jnp.maximum(m_intra, m_inter)
+
+    s_qk = jnp.einsum("bthd,bshd->btsh", q, k) * scale  # (B,T,S,H)
+    p = jnp.exp(d_mat - m_t[:, :, None, :])
+    num_intra = jnp.einsum("btsh,btsh,bshd->bthd", s_qk, p, v)
+    # normalizer: sum_s p[t,s] * (q_t . k_s)
+    den_intra = jnp.einsum("btsh,btsh->bth", s_qk, p)
+
+    w_inter = jnp.exp(m_inter - m_t)                    # (B,T,H)
+    num_inter = jnp.einsum("bthd,bhde->bthe", q, state.c) * scale
+    den_inter = jnp.einsum("bthd,bhd->bth", q, state.n) * scale
+    num = num_intra + num_inter * w_inter[..., None]
+    den = den_intra + den_inter * w_inter
+    h_out = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+
+    # state update to end of chunk
+    b_decay = total_a[:, None, :] - a + log_i           # (B,S,H)
+    m_new = jnp.maximum(state.m + total_a, jnp.max(b_decay, axis=1))
+    w_old = jnp.exp(state.m + total_a - m_new)          # (B,H)
+    w_s = jnp.exp(b_decay - m_new[:, None, :])          # (B,S,H)
+    c_new = (state.c * w_old[..., None, None]
+             + jnp.einsum("bsh,bshd,bshe->bhde", w_s, k, v))
+    n_new = state.n * w_old[..., None] + jnp.einsum("bsh,bshd->bhd", w_s, k)
+    return h_out, MLSTMState(c_new, n_new, m_new)
+
+
+def mlstm_forward(p: dict, x: jax.Array, n_heads: int,
+                  chunk: int = 256, return_state: bool = False):
+    """x: (B, S, D) -> (B, S, D) [, final MLSTMState]."""
+    b, s, d = x.shape
+    hd = d // n_heads
+    q = layers.linear(p["wq"], x).reshape(b, s, n_heads, hd)
+    k = layers.linear(p["wk"], x).reshape(b, s, n_heads, hd)
+    v = layers.linear(p["wv"], x).reshape(b, s, n_heads, hd)
+    log_i = layers.linear(p["wi"], x).astype(jnp.float32)
+    log_f = jax.nn.log_sigmoid(layers.linear(p["wf"], x).astype(jnp.float32))
+
+    w = min(chunk, s)
+    assert s % w == 0, (s, w)
+    nc = s // w
+    def to_chunks(t):
+        return jnp.moveaxis(t.reshape(b, nc, w, *t.shape[2:]), 1, 0)
+
+    def step(state, inp):
+        qc, kc, vc, fc, ic = inp
+        h, state = _mlstm_chunk(qc, kc, vc, fc, ic, state)
+        return state, h
+
+    state = mlstm_init_state(b, n_heads, hd, jnp.float32)
+    final_state, hs = jax.lax.scan(step, state,
+                                   (to_chunks(q.astype(jnp.float32)),
+                                    to_chunks(k.astype(jnp.float32)),
+                                    to_chunks(v.astype(jnp.float32)),
+                                    to_chunks(log_f), to_chunks(log_i)))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    o = jax.nn.sigmoid(layers.linear(p["wo_gate"], x))
+    out = layers.linear(p["wo"], h * o)
+    if return_state:
+        return out, final_state
+    return out
+
+
+def mlstm_decode_step(p: dict, x: jax.Array, state: MLSTMState,
+                      n_heads: int) -> tuple[jax.Array, MLSTMState]:
+    """x: (B, 1, D)."""
+    b, _, d = x.shape
+    hd = d // n_heads
+    out, new_state = _mlstm_chunk(
+        layers.linear(p["wq"], x).reshape(b, 1, n_heads, hd).astype(jnp.float32),
+        layers.linear(p["wk"], x).reshape(b, 1, n_heads, hd).astype(jnp.float32),
+        layers.linear(p["wv"], x).reshape(b, 1, n_heads, hd).astype(jnp.float32),
+        jax.nn.log_sigmoid(layers.linear(p["wf"], x).astype(jnp.float32)),
+        layers.linear(p["wi"], x).astype(jnp.float32),
+        state)
+    h = out.reshape(b, 1, d).astype(x.dtype)
+    o = jax.nn.sigmoid(layers.linear(p["wo_gate"], x))
+    return layers.linear(p["wo"], h * o), new_state
+
+
+# ===========================================================================
+# sLSTM (xLSTM scalar cell, true recurrence)
+# ===========================================================================
+
+def slstm_specs(d_model: int, n_heads: int, dtype=jnp.float32) -> dict:
+    return {
+        "wx": layers.linear_spec(d_model, 4 * d_model, "embed", "heads", dtype=dtype),
+        "r": ParamSpec((n_heads, d_model // n_heads, 4 * (d_model // n_heads)),
+                       (None, None, None), dtype, scale=0.02),  # block-diag recurrence
+        "wo": layers.linear_spec(d_model, d_model, "heads", "embed", dtype=dtype),
+    }
+
+
+class SLSTMState(NamedTuple):
+    c: jax.Array   # (B, H, hd)
+    n: jax.Array   # (B, H, hd)
+    h: jax.Array   # (B, H, hd)
+    m: jax.Array   # (B, H, hd)
+
+
+def slstm_init_state(b: int, n_heads: int, hd: int):
+    z = jnp.zeros((b, n_heads, hd), jnp.float32)
+    return SLSTMState(z, z, z, jnp.full((b, n_heads, hd), -1e9, jnp.float32))
+
+
+def _slstm_cell(state: SLSTMState, gates_x, r):
+    """gates_x: (B, H, hd, 4) pre-activations from x; r: (H, hd, 4*hd)."""
+    rec = jnp.einsum("bhd,hdk->bhk", state.h, r)
+    rec = rec.reshape(*state.h.shape[:-1], state.h.shape[-1], 4)
+    gz, gi, gf, go = [gates_x[..., j] + rec[..., j] for j in range(4)]
+    z = jnp.tanh(gz)
+    log_f = jax.nn.log_sigmoid(gf)
+    m_new = jnp.maximum(log_f + state.m, gi)
+    c = jnp.exp(log_f + state.m - m_new) * state.c + jnp.exp(gi - m_new) * z
+    n = jnp.exp(log_f + state.m - m_new) * state.n + jnp.exp(gi - m_new)
+    h = jax.nn.sigmoid(go) * c / jnp.maximum(n, 1e-6)
+    return SLSTMState(c, n, h, m_new)
+
+
+def slstm_forward(p: dict, x: jax.Array, n_heads: int,
+                  return_state: bool = False):
+    b, s, d = x.shape
+    hd = d // n_heads
+    gx = layers.linear(p["wx"], x).astype(jnp.float32)
+    gx = gx.reshape(b, s, n_heads, hd, 4)
+
+    def step(state, g):
+        state = _slstm_cell(state, g, p["r"].astype(jnp.float32))
+        return state, state.h
+
+    final, hs = jax.lax.scan(step, slstm_init_state(b, n_heads, hd),
+                             jnp.moveaxis(gx, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d).astype(x.dtype)
+    out = layers.linear(p["wo"], h)
+    if return_state:
+        return out, final
+    return out
+
+
+def slstm_decode_step(p: dict, x: jax.Array, state: SLSTMState, n_heads: int):
+    b, _, d = x.shape
+    hd = d // n_heads
+    gx = layers.linear(p["wx"], x).astype(jnp.float32).reshape(b, n_heads, hd, 4)
+    state = _slstm_cell(state, gx, p["r"].astype(jnp.float32))
+    h = state.h.reshape(b, 1, d).astype(x.dtype)
+    return layers.linear(p["wo"], h), state
+
+
+# ===========================================================================
+# RG-LRU (Griffin / RecurrentGemma)
+# ===========================================================================
+
+def rglru_specs(d_model: int, d_rnn: int, conv_width: int = 4,
+                dtype=jnp.float32) -> dict:
+    return {
+        "w_in": layers.linear_spec(d_model, d_rnn, "embed", "ffn", dtype=dtype),
+        "w_gate_branch": layers.linear_spec(d_model, d_rnn, "embed", "ffn", dtype=dtype),
+        "conv": ParamSpec((conv_width, d_rnn), ("conv", "ffn"), dtype, scale=0.1),
+        "w_a": layers.linear_spec(d_rnn, d_rnn, "ffn", None, dtype=dtype),
+        "w_x": layers.linear_spec(d_rnn, d_rnn, "ffn", None, dtype=dtype),
+        "lam": ParamSpec((d_rnn,), (None,), dtype, init="ones", scale=1.0),
+        "w_out": layers.linear_spec(d_rnn, d_model, "ffn", "embed", dtype=dtype),
+    }
+
+
+class RGLRUState(NamedTuple):
+    h: jax.Array          # (B, d_rnn) recurrent state
+    conv: jax.Array       # (B, conv_width-1, d_rnn) conv tail
+
+
+def rglru_init_state(b: int, d_rnn: int, conv_width: int = 4):
+    return RGLRUState(jnp.zeros((b, d_rnn), jnp.float32),
+                      jnp.zeros((b, conv_width - 1, d_rnn), jnp.float32))
+
+
+_C_RGLRU = 8.0
+
+
+def _rglru_gates(p, u):
+    r = jax.nn.sigmoid(layers.linear(p["w_a"], u).astype(jnp.float32))
+    i = jax.nn.sigmoid(layers.linear(p["w_x"], u).astype(jnp.float32))
+    log_a = -_C_RGLRU * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * u.astype(jnp.float32))
+    return a, gated
+
+
+def _causal_conv(p, u, state_tail=None):
+    """u: (B, S, d_rnn); depthwise causal conv width K."""
+    k = p["conv"].shape[0]
+    if state_tail is None:
+        pad = jnp.zeros((u.shape[0], k - 1, u.shape[2]), u.dtype)
+    else:
+        pad = state_tail.astype(u.dtype)
+    up = jnp.concatenate([pad, u], axis=1)
+    out = sum(up[:, i:i + u.shape[1]] * p["conv"][i].astype(u.dtype)
+              for i in range(k))
+    return out, up[:, -(k - 1):]
+
+
+def rglru_forward(p: dict, x: jax.Array, return_state: bool = False):
+    """Griffin recurrent block: in-proj -> causal conv -> RG-LRU, gated merge."""
+    u_in = layers.linear(p["w_in"], x)
+    u, tail = _causal_conv(p, u_in)
+    a, gated = _rglru_gates(p, u)
+
+    def combine(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    branch = jax.nn.gelu(layers.linear(p["w_gate_branch"], x))
+    out = layers.linear(p["w_out"], h.astype(x.dtype) * branch)
+    if return_state:
+        return out, RGLRUState(h[:, -1], tail.astype(jnp.float32))
+    return out
+
+
+def rglru_decode_step(p: dict, x: jax.Array, state: RGLRUState
+                      ) -> tuple[jax.Array, RGLRUState]:
+    """x: (B, 1, D)."""
+    u = layers.linear(p["w_in"], x)
+    u, tail = _causal_conv(p, u, state.conv)
+    a, gated = _rglru_gates(p, u)
+    h = a[:, 0] * state.h + gated[:, 0]
+    branch = jax.nn.gelu(layers.linear(p["w_gate_branch"], x))
+    out = layers.linear(p["w_out"], h[:, None].astype(x.dtype) * branch)
+    return out, RGLRUState(h, tail.astype(jnp.float32))

@@ -1,0 +1,104 @@
+"""Serving: jit-able serve_step (one decode token for a batch of requests) and
+a small batched engine (prompt queue -> prefill -> decode rounds) used by the
+serving example and tests.
+
+serve_step is what the decode_32k / long_500k dry-run cells lower: one new
+token against a KV cache of the cell's sequence length.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm
+
+
+def build_serve_step(cfg: lm.LMConfig, mesh=None, *, temperature: float = 0.0):
+    """Returns step(params, cache, tokens, pos, rng) ->
+    (next_tokens (B,1), logits (B,V), cache)."""
+
+    def serve_step(params, cache, tokens, pos, rng):
+        logits, cache = lm.decode_step(params, cache, tokens, pos, cfg, mesh)
+        logits = logits[:, :cfg.vocab_size]
+        if temperature > 0.0:
+            nxt = jax.random.categorical(rng, logits / temperature, axis=-1)
+        else:
+            nxt = jnp.argmax(logits, axis=-1)
+        return nxt[:, None].astype(jnp.int32), logits, cache
+
+    return serve_step
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: list[int]
+    max_new_tokens: int = 16
+    generated: list[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+
+class BatchedEngine:
+    """Minimal continuous-batching engine: fixed B slots, requests are
+    admitted as slots free, prefill runs token-by-token through the decode
+    path (teacher forcing), then decode until each request completes."""
+
+    def __init__(self, cfg: lm.LMConfig, params, batch_slots: int = 4,
+                 s_max: int = 256, mesh=None):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.s_max = s_max
+        self.step_fn = jax.jit(build_serve_step(cfg, mesh))
+        self.cache = lm.init_cache(cfg, batch_slots, s_max)
+        self.pos = jnp.zeros((batch_slots,), jnp.int32)
+        self.slots: list[Request | None] = [None] * batch_slots
+        self.pending: list[Request] = []
+        self.completed: list[Request] = []
+        self._next_token = jnp.zeros((batch_slots, 1), jnp.int32)
+        self._rng = jax.random.PRNGKey(0)
+
+    def submit(self, req: Request):
+        self.pending.append(req)
+
+    def _admit(self):
+        for i in range(self.b):
+            if self.slots[i] is None and self.pending:
+                req = self.pending.pop(0)
+                self.slots[i] = req
+                # prefill: feed prompt tokens through decode path
+                for t, tok in enumerate(req.prompt):
+                    toks = self._next_token.at[i, 0].set(tok)
+                    pos = self.pos.at[i].set(t)
+                    nxt, _, self.cache = self.step_fn(
+                        self.params, self.cache, toks, pos, self._rng)
+                    self._next_token = self._next_token.at[i].set(nxt[i])
+                self.pos = self.pos.at[i].set(len(req.prompt))
+
+    def run(self, max_rounds: int = 64):
+        while (self.pending or any(self.slots)) and max_rounds > 0:
+            max_rounds -= 1
+            self._admit()
+            if not any(self.slots):
+                break
+            self._rng, sub = jax.random.split(self._rng)
+            nxt, _, self.cache = self.step_fn(self.params, self.cache,
+                                              self._next_token, self.pos, sub)
+            self._next_token = nxt
+            self.pos = self.pos + jnp.array(
+                [1 if s is not None else 0 for s in self.slots], jnp.int32)
+            for i, req in enumerate(self.slots):
+                if req is None:
+                    continue
+                req.generated.append(int(nxt[i, 0]))
+                if req.done or int(self.pos[i]) >= self.s_max - 1:
+                    self.completed.append(req)
+                    self.slots[i] = None
+        return self.completed

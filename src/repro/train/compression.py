@@ -1,0 +1,65 @@
+"""Gradient compression with error feedback (distributed-optimization trick).
+
+int8 quantization of gradients before the DP all-reduce with per-leaf scales
+and an error-feedback accumulator (residual carried to the next step) —
+1-bit-Adam / PowerSGD-family technique that cuts DP wire volume 4x (f32) /
+2x (bf16) with provably bounded bias when error feedback is on.
+
+Usage inside a train step:
+    comp, efb = compress(grads, efb)          # quantize + update residual
+    comp = psum(comp) ...                     # cheap all-reduce
+    grads = decompress(comp)
+
+The roofline model credits compressed wire volume when enabled (perf knob in
+§Perf).
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+class Compressed(NamedTuple):
+    q: Tree        # int8 tree
+    scale: Tree    # f32 scalar per leaf
+
+
+def init_error_feedback(params: Tree) -> Tree:
+    return jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+
+def compress(grads: Tree, error_fb: Tree | None = None
+             ) -> tuple[Compressed, Tree]:
+    def one(g, e):
+        gf = g.astype(jnp.float32) + (e if e is not None else 0.0)
+        scale = jnp.maximum(jnp.max(jnp.abs(gf)), 1e-12) / 127.0
+        q = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        err = gf - q.astype(jnp.float32) * scale
+        return q, scale, err
+
+    if error_fb is None:
+        error_fb = jax.tree.map(lambda g: None, grads,
+                                is_leaf=lambda x: x is None)
+    out = jax.tree.map(one, grads, error_fb,
+                       is_leaf=lambda x: x is None)
+    is_t = lambda x: isinstance(x, tuple) and len(x) == 3
+    q = jax.tree.map(lambda o: o[0], out, is_leaf=is_t)
+    scale = jax.tree.map(lambda o: o[1], out, is_leaf=is_t)
+    err = jax.tree.map(lambda o: o[2], out, is_leaf=is_t)
+    return Compressed(q, scale), err
+
+
+def decompress(comp: Compressed) -> Tree:
+    return jax.tree.map(lambda q, s: q.astype(jnp.float32) * s,
+                        comp.q, comp.scale)
+
+
+def compression_ratio(grads: Tree) -> float:
+    """Wire-bytes ratio vs f32 (int8 payload + negligible scales)."""
+    total = sum(x.size for x in jax.tree.leaves(grads))
+    return (total * 1) / (total * 4)

@@ -1,0 +1,138 @@
+"""Optimizers in plain JAX (no external deps): AdamW + SGD-momentum, global
+gradient-norm clipping, cosine/linear schedules.  Optimizer states inherit the
+parameter sharding (moments are elementwise), so ZeRO-style state sharding
+falls out of the param sharding rules for free.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Tree = Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10000
+    min_lr_frac: float = 0.1
+    moment_dtype: str = "float32"   # "bfloat16" halves optimizer memory
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Tree
+    nu: Tree
+
+
+def adamw_init(params: Tree, cfg: AdamWConfig) -> AdamWState:
+    dt = jnp.bfloat16 if cfg.moment_dtype == "bfloat16" else jnp.float32
+    zeros = lambda p: jnp.zeros(p.shape, dt)
+    return AdamWState(jnp.zeros((), jnp.int32),
+                      jax.tree.map(zeros, params),
+                      jax.tree.map(zeros, params))
+
+
+def schedule(step: jax.Array, cfg: AdamWConfig) -> jax.Array:
+    warm = jnp.minimum(1.0, (step + 1) / max(cfg.warmup_steps, 1))
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.min_lr_frac + (1 - cfg.min_lr_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t))
+    return cfg.lr * warm * cos
+
+
+def global_norm(tree: Tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def clip_by_global_norm(grads: Tree, max_norm: float):
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (gnorm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale).astype(g.dtype),
+                        grads), gnorm
+
+
+def adamw_apply(grads: Tree, mu: Tree, nu: Tree, params: Tree,
+                step: jax.Array, lr: jax.Array, cfg: AdamWConfig):
+    """Pure elementwise AdamW application (clipping/schedule done upstream)."""
+    b1, b2 = cfg.b1, cfg.b2
+
+    def upd(g, m, v, p):
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * gf * gf
+        m_hat = m_new / (1 - b1 ** step.astype(jnp.float32))
+        v_hat = v_new / (1 - b2 ** step.astype(jnp.float32))
+        delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps)
+        if p.ndim >= 2:  # decay matrices only (norms/bias exempt)
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * delta
+        return (p_new.astype(p.dtype), m_new.astype(m.dtype),
+                v_new.astype(v.dtype))
+
+    out = jax.tree.map(upd, grads, mu, nu, params)
+    is_t = lambda x: isinstance(x, tuple)
+    return (jax.tree.map(lambda o: o[0], out, is_leaf=is_t),
+            jax.tree.map(lambda o: o[1], out, is_leaf=is_t),
+            jax.tree.map(lambda o: o[2], out, is_leaf=is_t))
+
+
+def adamw_update(grads: Tree, state: AdamWState, params: Tree,
+                 cfg: AdamWConfig, scan_subtrees: tuple[str, ...] = ()):
+    """Full update.  Subtree names in ``scan_subtrees`` (e.g. the stacked
+    "layers" dict) are updated via lax.scan over their leading (group) dim —
+    bounding the f32 optimizer temporaries to one layer group instead of the
+    whole stacked parameter tensor (matters at 100B+ scales)."""
+    grads, gnorm = clip_by_global_norm(grads, cfg.grad_clip)
+    step = state.step + 1
+    lr = schedule(state.step, cfg)
+
+    scan_keys = [k for k in scan_subtrees
+                 if isinstance(params, dict) and k in params]
+    direct_p = {k: v for k, v in params.items() if k not in scan_keys} \
+        if isinstance(params, dict) else params
+    direct_g = {k: grads[k] for k in direct_p} if isinstance(params, dict) else grads
+    direct_m = {k: state.mu[k] for k in direct_p} if isinstance(params, dict) else state.mu
+    direct_v = {k: state.nu[k] for k in direct_p} if isinstance(params, dict) else state.nu
+
+    p_new, mu, nu = adamw_apply(direct_g, direct_m, direct_v, direct_p,
+                                step, lr, cfg)
+    if isinstance(params, dict):
+        for k in scan_keys:
+            def body(_, xs):
+                g, m, v, p = xs
+                return None, adamw_apply(g, m, v, p, step, lr, cfg)
+            _, (pk, mk, vk) = jax.lax.scan(
+                body, None, (grads[k], state.mu[k], state.nu[k], params[k]))
+            p_new[k], mu[k], nu[k] = pk, mk, vk
+    return p_new, AdamWState(step, mu, nu), {"grad_norm": gnorm, "lr": lr}
+
+
+# --- SGD (for the SNN experiments) -----------------------------------------
+
+class SGDState(NamedTuple):
+    step: jax.Array
+    momentum: Tree
+
+
+def sgd_init(params: Tree) -> SGDState:
+    return SGDState(jnp.zeros((), jnp.int32),
+                    jax.tree.map(jnp.zeros_like, params))
+
+
+def sgd_update(grads: Tree, state: SGDState, params: Tree, lr: float = 1e-2,
+               momentum: float = 0.9):
+    mom = jax.tree.map(lambda m, g: momentum * m + g, state.momentum, grads)
+    params = jax.tree.map(lambda p, m: p - lr * m, params, mom)
+    return params, SGDState(state.step + 1, mom)

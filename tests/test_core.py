@@ -1,0 +1,231 @@
+"""Unit tests for the paper-core modules (ternary / IMA / KWN / LIF / NLD /
+macro / energy), each pinned to a paper claim where one exists."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dendrite, energy, ima, kwn, lif, macro, prbs, ternary
+
+
+class TestTernary:
+    def test_decompose_compose_roundtrip(self):
+        w = jnp.arange(-3, 4, dtype=jnp.float32)
+        msb, lsb = ternary.weight_decompose(w)
+        assert jnp.all(jnp.isin(msb, jnp.array([-1.0, 0.0, 1.0])))
+        assert jnp.all(jnp.isin(lsb, jnp.array([-1.0, 0.0, 1.0])))
+        np.testing.assert_array_equal(ternary.weight_compose(msb, lsb), w)
+
+    def test_quantize_3bit_range(self):
+        w = jax.random.normal(jax.random.PRNGKey(0), (64, 32))
+        w_int, scale = ternary.quantize_weights_3bit(w)
+        assert float(jnp.max(jnp.abs(w_int))) <= 3
+        err = jnp.abs(w - w_int * scale)
+        assert float(jnp.max(err)) <= float(jnp.max(scale)) * 0.51
+
+    def test_ste_gradient_passthrough(self):
+        g = jax.grad(lambda w: jnp.sum(ternary.quantize_weights_ste(w) ** 2))(
+            jnp.ones((8, 8)) * 0.3)
+        assert bool(jnp.all(jnp.isfinite(g))) and float(jnp.sum(jnp.abs(g))) > 0
+
+    def test_mc_current_ratio_spread(self):
+        # Fig. 3c: minimal fluctuation around the nominal 2x ratio.
+        r = ternary.sample_current_ratio(jax.random.PRNGKey(1), (10000,), sigma=0.02)
+        assert abs(float(jnp.mean(r)) - 2.0) < 0.02
+        assert float(jnp.std(r)) < 0.1
+
+    def test_fig3d_5bit_advantages(self):
+        # Paper: 4x latency vs PWM, 7.8x bit-cell count vs MCL at 5-bit.
+        lat_t, cells_t = ternary.weight_implementation_cost(5, "twin")
+        lat_p, _ = ternary.weight_implementation_cost(5, "pwm")
+        _, cells_m = ternary.weight_implementation_cost(5, "mcl")
+        assert lat_p / lat_t == pytest.approx(4.0)
+        assert cells_m / cells_t == pytest.approx(7.8, abs=0.1)
+
+
+class TestIMA:
+    def test_linear_codebook_roundtrip(self):
+        cb = ima.linear_codebook(5, -64, 64)
+        xs = cb.levels
+        np.testing.assert_array_equal(ima.ima_convert(xs, cb),
+                                      jnp.arange(cb.n_codes))
+        np.testing.assert_allclose(ima.ima_quantize(xs, cb), xs, atol=1e-5)
+
+    def test_nlq_denser_near_zero(self):
+        cb = ima.nlq_codebook(5, -64, 64, gamma=2.0)
+        gaps = jnp.diff(cb.levels)
+        mid = cb.n_codes // 2
+        assert float(gaps[mid - 1]) < float(gaps[0])  # fine near 0, coarse at tail
+
+    def test_nlq_5bit_covers_8bit_range(self):
+        # Paper: 5-bit ADC for 8-bit range via NLQ + LUT map-back.
+        cb = ima.nlq_codebook(5, -128, 127)
+        assert cb.n_codes == 32
+        assert float(cb.levels[0]) == -128 and float(cb.levels[-1]) == 127
+
+    def test_fig7a_transfer_error(self):
+        cb = ima.nlq_codebook(5, -64, 64)
+        m = ima.measure_transfer_error(cb, jax.random.PRNGKey(0))
+        assert m["mean_lsb"] == pytest.approx(0.41, abs=0.08)
+        assert m["std_lsb"] == pytest.approx(1.34, abs=0.12)
+
+    def test_fig7b_inl(self):
+        cb = ima.activation_codebook(5, ima.quadratic, -8, 8)
+        v = ima.measure_inl(cb, ima.quadratic, key=jax.random.PRNGKey(0),
+                            noise=ima.IMANoiseModel())
+        assert v == pytest.approx(0.91, abs=0.1)
+
+    def test_activation_codebook_matches_f(self):
+        cb = ima.activation_codebook(6, ima.quadratic, -8, 8)
+        xs = jnp.linspace(-8, 8, 257)
+        err = jnp.abs(ima.ima_quantize(xs, cb) - ima.quadratic(xs))
+        lsb = (jnp.max(cb.levels) - jnp.min(cb.levels)) / (cb.n_codes - 1)
+        assert float(jnp.mean(err)) < float(lsb)
+
+    def test_ste_grad(self):
+        cb = ima.nlq_codebook(5, -4, 4)
+        g = jax.grad(lambda x: jnp.sum(ima.ima_quantize_ste(x, cb)))(
+            jnp.linspace(-3, 3, 16))
+        assert bool(jnp.all(g >= 0)) and float(jnp.sum(g)) > 0
+
+
+class TestKWN:
+    def setup_method(self):
+        self.cb = ima.nlq_codebook(5, -64, 64)
+        self.mac = jax.random.normal(jax.random.PRNGKey(3), (6, 128)) * 20
+
+    def test_topk_and_ramp_agree(self):
+        for k in (1, 3, 12, 32):
+            a = kwn.kwn_select(self.mac, k, self.cb)
+            b = kwn.kwn_ramp_scan(self.mac, k, self.cb)
+            np.testing.assert_array_equal(a.mask, b.mask)
+            np.testing.assert_array_equal(a.adc_steps, b.adc_steps)
+
+    def test_mask_has_k_winners(self):
+        r = kwn.kwn_select(self.mac, 12, self.cb)
+        np.testing.assert_array_equal(r.mask.sum(-1), 12.0)
+
+    def test_winners_are_largest_codes(self):
+        r = kwn.kwn_select(self.mac, 12, self.cb)
+        codes_all = ima.ima_convert(self.mac, self.cb)
+        kth = jnp.min(jnp.take_along_axis(codes_all, r.indices, -1), -1)
+        losers = jnp.where(r.mask == 0, codes_all, -1)
+        assert bool(jnp.all(jnp.max(losers, -1) <= kth))
+
+    def test_early_stop_fewer_steps_small_k(self):
+        s3 = kwn.kwn_select(self.mac, 3, self.cb).adc_steps
+        s32 = kwn.kwn_select(self.mac, 32, self.cb).adc_steps
+        assert bool(jnp.all(s3 <= s32))
+
+    def test_latency_claims(self):
+        d = kwn.lif_latency_updates(12, 128)
+        assert d["speedup"] == pytest.approx(10.67, abs=0.1)  # paper: 10x
+
+
+class TestLIF:
+    def test_integrate_and_fire(self):
+        st = lif.lif_init((4,))
+        p = lif.LIFParams(beta=0.9, v_th1=1.0, noise_amp=0.0)
+        drive = jnp.full((10, 4), 0.4)
+        st2, spikes = lif.lif_run(st, drive, p)
+        assert float(spikes.sum()) > 0  # must fire with sustained drive
+
+    def test_hold_branch_eq1(self):
+        # Eq. (1): non-winners keep V_mem exactly.
+        st = lif.LIFState(jnp.array([0.3, 0.3]), prbs.lfsr_init(1))
+        p = lif.LIFParams(noise_amp=0.0)
+        mask = jnp.array([1.0, 0.0])
+        st2, _ = lif.lif_step(st, jnp.array([0.2, 0.2]), p, update_mask=mask)
+        assert st2.v_mem[1] == pytest.approx(0.3)
+        assert st2.v_mem[0] == pytest.approx(0.9 * 0.3 + 0.2)
+
+    def test_snl_noise_only_in_band(self):
+        p = lif.LIFParams(v_th1=1.0, v_th2=0.6, noise_amp=0.05)
+        st = lif.LIFState(jnp.array([0.1, 0.8]), prbs.lfsr_init(7))
+        st2, _ = lif.lif_step(st, jnp.zeros(2), p,
+                              update_mask=jnp.zeros(2), use_snl=True)
+        assert st2.v_mem[0] == pytest.approx(0.1)          # below band: untouched
+        assert abs(float(st2.v_mem[1]) - 0.8) == pytest.approx(0.05, abs=1e-6)
+
+    def test_surrogate_grad_nonzero(self):
+        g = jax.grad(lambda v: jnp.sum(lif.spike_fn(v, jnp.float32(1.0))))(
+            jnp.array([0.9, 1.1]))
+        assert float(jnp.sum(jnp.abs(g))) > 0
+
+    def test_prbs_period_and_balance(self):
+        st = prbs.lfsr_init(123)
+        _, bits = prbs.prbs_bits(st, 2 ** 15 - 1)
+        # Maximal-length PRBS-15: balanced within 1 bit over a full period.
+        assert abs(int(bits.sum()) * 2 - (2 ** 15 - 1)) == 1
+
+
+class TestMacroEnergy:
+    def test_tiled_matches_dense_high_res(self):
+        key = jax.random.PRNGKey(0)
+        s = jnp.sign(jax.random.normal(key, (3, 600)))
+        w = jnp.round(jax.random.normal(jax.random.PRNGKey(1), (600, 200)) * 2
+                      ).clip(-3, 3)
+        cfg = macro.CIMMacroConfig(code_bits=12, mac_range=1024.0)
+        out, geo = macro.tiled_cim_mac(s, w, cfg)
+        ref = s @ w
+        assert geo.n_macros == 3 * 2
+        np.testing.assert_allclose(out, ref, atol=2.0)
+
+    def test_kwn_forward_sparsity(self):
+        key = jax.random.PRNGKey(2)
+        s = jnp.sign(jax.random.normal(key, (4, 256)))
+        w = jnp.round(jax.random.normal(jax.random.PRNGKey(3), (256, 128)) * 2
+                      ).clip(-3, 3)
+        drive, mask, res = macro.kwn_forward(s, w, 12, macro.CIMMacroConfig())
+        assert bool(jnp.all((drive != 0).sum(-1) <= 12))
+        np.testing.assert_array_equal(mask.sum(-1), 12)
+
+    def test_table1_energy_numbers(self):
+        t = energy.table1_energy_entries()
+        assert t["kwn_nmnist_pj_per_sop"] == pytest.approx(0.8, abs=0.05)
+        assert t["kwn_dvs_pj_per_sop"] == pytest.approx(1.5, abs=0.08)
+        assert t["nld_nmnist_pj_per_sop"] == pytest.approx(1.8, abs=0.09)
+        assert t["nld_dvs_pj_per_sop"] == pytest.approx(2.3, abs=0.12)
+        assert t["nld_quiroga_pj_per_sop"] == pytest.approx(2.1, abs=0.11)
+
+    def test_sota_improvement(self):
+        assert energy.improvement_vs_sota() == pytest.approx(1.6, abs=0.05)
+
+    def test_early_stop_30pct_at_k12(self):
+        assert energy.early_stop_saving(12) == pytest.approx(0.30, abs=0.01)
+
+    def test_vdd_scaling_monotone(self):
+        ee = energy.ee_vs_vdd()
+        vals = [ee[f"{v:.1f}V"]["kwn_k3_nmnist"] for v in (0.7, 0.8, 0.9, 1.0)]
+        assert vals == sorted(vals)  # best EE at lowest VDD (Fig. 9b)
+
+
+class TestDendrite:
+    def test_no_parameter_overhead(self):
+        # Paper: NLD adds no parameter overhead vs dense (sparse branches).
+        p = dendrite.dendrite_init(jax.random.PRNGKey(0), 256, 128, 4)
+        n_syn = float(p.mask.sum())
+        assert n_syn == pytest.approx(256 * 128, rel=0.1)
+
+    def test_eq2_shapes_and_grad(self):
+        p = dendrite.dendrite_init(jax.random.PRNGKey(1), 64, 32, 4)
+        s = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (5, 64)))
+
+        def loss(wd):
+            out = dendrite.dendrite_mac(p._replace(w_dend=wd), s, f=ima.quadratic)
+            return jnp.sum(out ** 2)
+
+        g = jax.grad(loss)(p.w_dend)
+        assert g.shape == (4, 32) and bool(jnp.all(jnp.isfinite(g)))
+
+    def test_quantized_path_close_to_ideal(self):
+        p = dendrite.dendrite_init(jax.random.PRNGKey(1), 64, 32, 2)
+        s = jnp.sign(jax.random.normal(jax.random.PRNGKey(2), (5, 64)))
+        cb = ima.activation_codebook(7, ima.quadratic, -16, 16)
+        ideal = dendrite.dendrite_mac(p, s, f=ima.quadratic)
+        quant = dendrite.dendrite_mac(p, s, nl_cb=cb, quantize=True)
+        # scale-aware: mean quantization error under 6% of the signal scale
+        err = float(jnp.mean(jnp.abs(ideal - quant)))
+        scale = float(jnp.max(jnp.abs(ideal)))
+        assert err < 0.06 * scale, (err, scale)

@@ -1,0 +1,159 @@
+"""Per-kernel validation: shape/dtype sweeps, allclose vs the ref.py oracles,
+and hypothesis property tests on the kernel invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import ima as ima_lib
+from repro.kernels import ops, ref
+
+
+def _tern(key, shape):
+    return jax.random.randint(key, shape, -1, 2).astype(jnp.int8)
+
+
+class TestTernaryMac:
+    @pytest.mark.parametrize("m,k,n", [
+        (8, 256, 128), (128, 256, 128), (64, 512, 256),
+        (17, 300, 130),            # non-aligned: exercises padding
+        (256, 1024, 384), (1, 256, 128),
+    ])
+    def test_matches_ref(self, m, k, n):
+        keys = jax.random.split(jax.random.PRNGKey(m * 7 + n), 3)
+        x = _tern(keys[0], (m, k))
+        msb = _tern(keys[1], (k, n))
+        lsb = _tern(keys[2], (k, n))
+        out = ops.ternary_mac(x, msb, lsb)
+        want = ref.ternary_mac_ref(x, msb, lsb)
+        np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+
+    def test_batched_leading_dims(self):
+        keys = jax.random.split(jax.random.PRNGKey(0), 3)
+        x = _tern(keys[0], (2, 5, 256))
+        msb, lsb = _tern(keys[1], (256, 128)), _tern(keys[2], (256, 128))
+        out = ops.ternary_mac(x, msb, lsb)
+        want = ref.ternary_mac_ref(x.reshape(-1, 256), msb, lsb).reshape(2, 5, 128)
+        np.testing.assert_allclose(out, want, rtol=1e-6)
+
+    def test_nondefault_ratio(self):
+        keys = jax.random.split(jax.random.PRNGKey(1), 3)
+        x, msb, lsb = (_tern(keys[0], (16, 256)), _tern(keys[1], (256, 128)),
+                       _tern(keys[2], (256, 128)))
+        out = ops.ternary_mac(x, msb, lsb, ratio=3.0)
+        want = ref.ternary_mac_ref(x, msb, lsb, ratio=3.0)
+        np.testing.assert_allclose(out, want, rtol=1e-6)
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(1, 40), st.integers(1, 300), st.integers(1, 200),
+           st.integers(0, 2 ** 31 - 1))
+    def test_property_exact_integer_gemm(self, m, k, n, seed):
+        # Ternary x ternary-plane GEMM is exact in f32 for any shape.
+        keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+        x = _tern(keys[0], (m, k))
+        msb, lsb = _tern(keys[1], (k, n)), _tern(keys[2], (k, n))
+        out = ops.ternary_mac(x, msb, lsb)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(ref.ternary_mac_ref(x, msb, lsb)))
+
+
+class TestKwnTopk:
+    @pytest.mark.parametrize("m,n,k,bits", [
+        (8, 128, 3, 5), (64, 128, 12, 5), (16, 128, 1, 5),
+        (9, 128, 12, 5),           # padding rows
+        (32, 256, 16, 6), (8, 128, 127, 5),
+    ])
+    def test_matches_ref(self, m, n, k, bits):
+        cb = ima_lib.nlq_codebook(bits, -64, 64)
+        mac = jax.random.normal(jax.random.PRNGKey(m + n + k), (m, n)) * 20
+        mask, steps = ops.kwn_topk(mac, cb.boundaries, k)
+        want_mask, want_steps = ref.kwn_topk_ref(mac, cb.boundaries, k)
+        np.testing.assert_array_equal(mask, want_mask)
+        np.testing.assert_array_equal(steps, want_steps[..., 0])
+
+    def test_batched(self):
+        cb = ima_lib.nlq_codebook(5, -64, 64)
+        mac = jax.random.normal(jax.random.PRNGKey(5), (3, 7, 128)) * 20
+        mask, steps = ops.kwn_topk(mac, cb.boundaries, 12)
+        assert mask.shape == (3, 7, 128) and steps.shape == (3, 7)
+        np.testing.assert_array_equal(mask.sum(-1), 12.0)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 64), st.integers(1, 64), st.integers(0, 2 ** 31 - 1))
+    def test_property_k_winners_and_dominance(self, m, k, seed):
+        cb = ima_lib.nlq_codebook(5, -64, 64)
+        mac = jax.random.normal(jax.random.PRNGKey(seed), (m, 128)) * 25
+        mask, steps = ops.kwn_topk(mac, cb.boundaries, k)
+        assert bool(jnp.all(mask.sum(-1) == k))
+        # Every winner's code >= every loser's code (ramp dominance).
+        codes = ima_lib.ima_convert(mac, cb)
+        wmin = jnp.min(jnp.where(mask > 0, codes, 10 ** 6), -1)
+        lmax = jnp.max(jnp.where(mask == 0, codes, -1), -1)
+        assert bool(jnp.all(lmax <= wmin))
+        # Early stop: steps = distance from top code down to the K-th winner.
+        assert bool(jnp.all((steps >= 0) & (steps <= cb.n_codes - 1)))
+
+
+class TestLifStep:
+    @pytest.mark.parametrize("shape", [(8, 128), (64, 128), (33, 100), (256, 512)])
+    @pytest.mark.parametrize("use_snl", [True, False])
+    def test_matches_ref(self, shape, use_snl):
+        keys = jax.random.split(jax.random.PRNGKey(shape[0]), 4)
+        v = jax.random.normal(keys[0], shape)
+        drive = jax.random.normal(keys[1], shape)
+        mask = (jax.random.uniform(keys[2], shape) < 0.1).astype(jnp.float32)
+        noise = 0.05 * jnp.sign(jax.random.normal(keys[3], shape))
+        out_v, out_s = ops.lif_step(v, drive, mask, noise, use_snl=use_snl)
+        want_v, want_s = ref.lif_step_ref(v, drive, mask, noise, use_snl=use_snl)
+        np.testing.assert_allclose(out_v, want_v, atol=1e-6)
+        np.testing.assert_array_equal(out_s, want_s)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(1, 50), st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+    def test_property_hold_and_reset(self, m, n, seed):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+        v = jax.random.normal(keys[0], (m, n)) * 0.3 - 0.5  # below SNL band
+        drive = jax.random.normal(keys[1], (m, n))
+        mask = jnp.zeros((m, n))
+        out_v, out_s = ops.lif_step(v, drive, mask, jnp.zeros((m, n)))
+        # With no winners and V below the SNL band, state must hold exactly.
+        np.testing.assert_allclose(out_v, jnp.where(v >= 1.0, 0.0, v), atol=1e-6)
+        # Spiked neurons are reset.
+        assert bool(jnp.all(jnp.where(out_s > 0, out_v == 0.0, True)))
+
+
+class TestNlq:
+    @pytest.mark.parametrize("m,n,bits,kind", [
+        (8, 128, 5, "nlq"), (64, 128, 5, "lin"), (16, 256, 6, "nlq"),
+        (9, 130, 5, "nlq"), (128, 128, 4, "act"),
+    ])
+    def test_matches_ref(self, m, n, bits, kind):
+        if kind == "nlq":
+            cb = ima_lib.nlq_codebook(bits, -64, 64)
+        elif kind == "lin":
+            cb = ima_lib.linear_codebook(bits, -64, 64)
+        else:
+            cb = ima_lib.activation_codebook(bits, ima_lib.quadratic, -8, 8)
+        x = jax.random.normal(jax.random.PRNGKey(m * 3 + n), (m, n)) * 30
+        codes, y = ops.nlq_convert(x, cb.boundaries, cb.levels)
+        want_c, want_y = ref.nlq_convert_ref(x, cb.boundaries, cb.levels)
+        np.testing.assert_array_equal(codes, want_c)
+        np.testing.assert_allclose(y, want_y, rtol=1e-6)
+
+    def test_matches_core_ima(self):
+        cb = ima_lib.nlq_codebook(5, -64, 64)
+        x = jax.random.normal(jax.random.PRNGKey(9), (32, 128)) * 30
+        codes, y = ops.nlq_convert(x, cb.boundaries, cb.levels)
+        np.testing.assert_array_equal(codes, ima_lib.ima_convert(x, cb))
+        np.testing.assert_allclose(y, ima_lib.ima_quantize(x, cb), rtol=1e-6)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(2, 7), st.integers(0, 2 ** 31 - 1))
+    def test_property_monotone_and_bounded(self, bits, seed):
+        cb = ima_lib.nlq_codebook(bits, -64, 64)
+        x = jnp.sort(jax.random.normal(jax.random.PRNGKey(seed), (4, 64)) * 40, -1)
+        codes, y = ops.nlq_convert(x, cb.boundaries, cb.levels)
+        assert bool(jnp.all(jnp.diff(codes, axis=-1) >= 0))  # monotone codes
+        assert bool(jnp.all((codes >= 0) & (codes < cb.n_codes)))

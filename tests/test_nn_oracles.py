@@ -1,0 +1,235 @@
+"""Numerical oracles for the nn layer implementations:
+blockwise online-softmax attention vs naive softmax(QK^T)V; sliding-window
+blocked attention vs naive masked attention; chunked mLSTM vs naive
+sequential recurrence; RG-LRU associative scan vs sequential scan; KV
+quantization roundtrip; MoE dispatch invariants (hypothesis)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.nn import attention, kvq, moe, recurrent
+
+
+def _naive_attention(q, k, v, causal=True, window=None, softcap=None):
+    b, s, h, hd = q.shape
+    scores = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(hd)
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    i, j = jnp.arange(s)[:, None], jnp.arange(s)[None, :]
+    mask = jnp.ones((s, s), bool)
+    if causal:
+        mask &= i >= j
+    if window is not None:
+        mask &= (i - j) < window
+    scores = jnp.where(mask[None, None], scores, -1e30)
+    w = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+class TestBlockwiseAttention:
+    @pytest.mark.parametrize("s,chunk", [(64, 16), (128, 32), (96, 32),
+                                         (64, 64)])
+    def test_causal_matches_naive(self, s, chunk):
+        key = jax.random.PRNGKey(s)
+        q, k, v = [jax.random.normal(jax.random.fold_in(key, i), (2, s, 3, 8))
+                   for i in range(3)]
+        out = attention.blockwise_attention(q, k, v, causal=True, chunk=chunk)
+        ref = _naive_attention(q, k, v, causal=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_bidirectional_matches_naive(self):
+        key = jax.random.PRNGKey(1)
+        q, k, v = [jax.random.normal(jax.random.fold_in(key, i), (2, 64, 2, 8))
+                   for i in range(3)]
+        out = attention.blockwise_attention(q, k, v, causal=False, chunk=16)
+        ref = _naive_attention(q, k, v, causal=False)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_softcap_matches_naive(self):
+        key = jax.random.PRNGKey(2)
+        q, k, v = [jax.random.normal(jax.random.fold_in(key, i), (1, 64, 2, 8))
+                   * 3 for i in range(3)]
+        out = attention.blockwise_attention(q, k, v, causal=True, chunk=16,
+                                            softcap=10.0)
+        ref = _naive_attention(q, k, v, causal=True, softcap=10.0)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=3e-5, atol=3e-5)
+
+    @pytest.mark.parametrize("window", [16, 32])
+    def test_sliding_window_matches_naive(self, window):
+        key = jax.random.PRNGKey(3)
+        s = 96 if window == 32 else 64
+        q, k, v = [jax.random.normal(jax.random.fold_in(key, i), (2, s, 2, 8))
+                   for i in range(3)]
+        out = attention.blockwise_attention(q, k, v, causal=True,
+                                            window=window)
+        ref = _naive_attention(q, k, v, causal=True, window=window)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-5, atol=2e-5)
+
+    def test_grads_match_naive(self):
+        key = jax.random.PRNGKey(4)
+        q, k, v = [jax.random.normal(jax.random.fold_in(key, i), (1, 64, 2, 8))
+                   for i in range(3)]
+
+        g1 = jax.grad(lambda q: attention.blockwise_attention(
+            q, k, v, causal=True, chunk=16).sum())(q)
+        g2 = jax.grad(lambda q: _naive_attention(q, k, v, causal=True).sum())(q)
+        np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestMLSTMOracle:
+    def _naive_mlstm(self, q, k, v, log_f, log_i):
+        """Sequential stabilized mLSTM recurrence (the definition)."""
+        b, s, h, hd = q.shape
+        scale = 1.0 / np.sqrt(hd)
+        c = jnp.zeros((b, h, hd, hd))
+        n = jnp.zeros((b, h, hd))
+        m = jnp.full((b, h), -1e9)
+        outs = []
+        for t in range(s):
+            m_new = jnp.maximum(log_f[:, t] + m, log_i[:, t])
+            c = (jnp.exp(log_f[:, t] + m - m_new)[..., None, None] * c
+                 + jnp.exp(log_i[:, t] - m_new)[..., None, None]
+                 * jnp.einsum("bhd,bhe->bhde", k[:, t], v[:, t]))
+            n = (jnp.exp(log_f[:, t] + m - m_new)[..., None] * n
+                 + jnp.exp(log_i[:, t] - m_new)[..., None] * k[:, t])
+            m = m_new
+            num = jnp.einsum("bhd,bhde->bhe", q[:, t], c) * scale
+            den = jnp.abs(jnp.einsum("bhd,bhd->bh", q[:, t], n)) * scale
+            outs.append(num / jnp.maximum(den, jnp.exp(-m))[..., None])
+        return jnp.stack(outs, axis=1)  # (B,S,H,hd)
+
+    @pytest.mark.parametrize("s,chunk", [(16, 4), (32, 8), (32, 32)])
+    def test_chunked_matches_sequential(self, s, chunk):
+        key = jax.random.PRNGKey(7)
+        b, h, hd = 2, 2, 4
+        ks = jax.random.split(key, 5)
+        q, k, v = [jax.random.normal(ks[i], (b, s, h, hd)) for i in range(3)]
+        log_f = jax.nn.log_sigmoid(jax.random.normal(ks[3], (b, s, h)) + 1.0)
+        log_i = jax.random.normal(ks[4], (b, s, h)) * 0.5
+
+        ref = self._naive_mlstm(q, k, v, log_f, log_i)
+
+        state = recurrent.mlstm_init_state(b, h, hd, jnp.float32)
+        outs = []
+        for c0 in range(0, s, chunk):
+            sl = slice(c0, c0 + chunk)
+            o, state = recurrent._mlstm_chunk(q[:, sl], k[:, sl], v[:, sl],
+                                              log_f[:, sl], log_i[:, sl],
+                                              state)
+            outs.append(o)
+        out = jnp.concatenate(outs, axis=1)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   rtol=2e-4, atol=2e-4)
+
+
+class TestRGLRUOracle:
+    def test_assoc_scan_matches_sequential(self):
+        key = jax.random.PRNGKey(9)
+        b, s, d = 2, 24, 8
+        a = jax.nn.sigmoid(jax.random.normal(key, (b, s, d)))
+        x = jax.random.normal(jax.random.fold_in(key, 1), (b, s, d))
+
+        def combine(e1, e2):
+            a1, b1 = e1
+            a2, b2 = e2
+            return a1 * a2, a2 * b1 + b2
+
+        _, h_par = jax.lax.associative_scan(combine, (a, x), axis=1)
+        h_seq = []
+        h = jnp.zeros((b, d))
+        for t in range(s):
+            h = a[:, t] * h + x[:, t]
+            h_seq.append(h)
+        np.testing.assert_allclose(np.asarray(h_par),
+                                   np.asarray(jnp.stack(h_seq, 1)),
+                                   rtol=1e-5, atol=1e-5)
+
+    def test_decode_continues_forward(self):
+        """rglru_forward final state must continue identically step-by-step."""
+        key = jax.random.PRNGKey(11)
+        d = 8
+        p = {k: v for k, v in zip(
+            ["w_in", "w_gate_branch", "conv", "w_a", "w_x", "lam", "w_out"],
+            [None] * 7)}
+        from repro.nn.module import materialize
+        from repro.nn.recurrent import rglru_specs
+        p = materialize(rglru_specs(d, d), key)
+        x = jax.random.normal(jax.random.fold_in(key, 1), (1, 12, d))
+        out_full, st = recurrent.rglru_forward(p, x, return_state=True)
+        # replay the last step from the state after s-1 steps
+        out_prefix, st_prefix = recurrent.rglru_forward(p, x[:, :-1],
+                                                        return_state=True)
+        out_step, _ = recurrent.rglru_decode_step(p, x[:, -1:], st_prefix)
+        np.testing.assert_allclose(np.asarray(out_step),
+                                   np.asarray(out_full[:, -1:]),
+                                   rtol=1e-4, atol=1e-4)
+
+
+class TestKVQuant:
+    @pytest.mark.parametrize("mode,tol", [("int8", 0.012), ("int4", 0.16)])
+    def test_roundtrip_error(self, mode, tol):
+        x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 4, 32))
+        q, s = kvq.quantize(x, mode)
+        out = kvq.dequantize(q, s, mode, jnp.float32)
+        rel = float(jnp.max(jnp.abs(out - x)) / jnp.max(jnp.abs(x)))
+        assert rel < tol
+
+    def test_int4_packing_shape(self):
+        x = jnp.ones((2, 8, 2, 64))
+        q, s = kvq.quantize(x, "int4")
+        assert q.shape == (2, 8, 2, 32) and q.dtype == jnp.uint8
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 31 - 1), st.sampled_from(["int8", "int4"]))
+    def test_property_scale_invariance(self, seed, mode):
+        # quantize(c*x) == c * quantize(x) up to quantization error
+        x = jax.random.normal(jax.random.PRNGKey(seed), (4, 16))
+        for c in (0.01, 100.0):
+            q1, s1 = kvq.quantize(x, mode)
+            q2, s2 = kvq.quantize(x * c, mode)
+            a = kvq.dequantize(q1, s1, mode, jnp.float32) * c
+            b = kvq.dequantize(q2, s2, mode, jnp.float32)
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                       rtol=1e-3, atol=float(
+                                           jnp.max(jnp.abs(x)) * c * 0.2))
+
+
+class TestMoEDispatchInvariants:
+    @settings(max_examples=25, deadline=None)
+    @given(st.integers(2, 40), st.integers(2, 16), st.integers(1, 4),
+           st.integers(0, 2 ** 31 - 1))
+    def test_dispatch_combine_conservation(self, t, e, k, seed):
+        k = min(k, e)
+        key = jax.random.PRNGKey(seed)
+        logits = jax.random.normal(key, (t, e))
+        gate, idx, _ = moe.router_topk(logits, k)
+        cap = t  # no drops
+        disp, comb = moe._dispatch_onehot(idx, gate, e, cap, jnp.float32)
+        # each (token, slot) used at most once; each token dispatched k times
+        assert bool(jnp.all(disp.sum(axis=(1, 2)) == k))
+        # each expert slot holds at most one token
+        assert bool(jnp.all(disp.sum(axis=0) <= 1.0))
+        # combine weights sum to 1 per token (gates renormalized, no drops)
+        np.testing.assert_allclose(np.asarray(comb.sum(axis=(1, 2))),
+                                   np.ones(t), rtol=1e-5)
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(4, 32), st.integers(0, 2 ** 31 - 1))
+    def test_capacity_drops_monotone(self, t, seed):
+        e, k = 4, 2
+        logits = jax.random.normal(jax.random.PRNGKey(seed), (t, e))
+        gate, idx, _ = moe.router_topk(logits, k)
+        kept = []
+        for cap in (1, 2, t):
+            disp, _ = moe._dispatch_onehot(idx, gate, e, cap, jnp.float32)
+            kept.append(float(disp.sum()))
+        assert kept[0] <= kept[1] <= kept[2]
+        assert kept[2] == t * k  # cap=t keeps everything
