@@ -1,6 +1,11 @@
 """Train the paper's SNN on the synthetic N-MNIST stand-in and evaluate both
 silicon modes (the paper's Fig. 8 experiment, reduced).
 
+The noise-free silicon evaluation and the batched event-stream serving demo
+run on the *fused* macro-step kernel (MAC -> IMA -> KWN/NLD -> LIF in one
+Pallas kernel per time step); the noisy evaluation exercises the composed
+path with the Fig. 7 IMA error model.
+
     PYTHONPATH=src python examples/train_snn_events.py [--steps 150]
 """
 
@@ -11,6 +16,7 @@ import jax
 from repro.core import ima
 from repro.data import events as ev_lib
 from repro.models import snn
+from repro.serve.engine import EventRequest, SNNEventEngine
 
 
 def main():
@@ -18,6 +24,8 @@ def main():
     ap.add_argument("--steps", type=int, default=150)
     ap.add_argument("--dataset", default="nmnist",
                     choices=list(ev_lib.DATASETS))
+    ap.add_argument("--serve-requests", type=int, default=96,
+                    help="event streams pushed through the serving engine")
     args = ap.parse_args()
 
     ds = ev_lib.EventDataset(ev_lib.DATASETS[args.dataset])
@@ -30,10 +38,27 @@ def main():
         p, losses = snn.train(cfg, ds, n_steps=args.steps, batch=64)
         acc, tele = snn.evaluate(p, cfg, ds, jax.random.PRNGKey(1),
                                  n_batches=4, noise=ima.IMANoiseModel())
+        acc_f, tele_f = snn.evaluate(p, cfg, ds, jax.random.PRNGKey(1),
+                                     n_batches=4, fused=True)
         print(f"{args.dataset} {mode.upper():3s}: loss "
               f"{losses[0]:.2f}->{losses[-1]:.2f}  silicon acc {acc:.3f}  "
-              f"mean ADC steps {tele['adc_steps']:.1f}/31  "
-              f"LIF updates/step {tele['lif_updates']:.0f}/128")
+              f"fused acc {acc_f:.3f}  "
+              f"mean ADC steps {tele_f['adc_steps']:.1f}/31  "
+              f"LIF updates/step {tele_f['lif_updates']:.0f}/128")
+
+        if mode == "kwn" and args.serve_requests:
+            engine = SNNEventEngine(cfg, p, batch_slots=32)
+            key = jax.random.PRNGKey(7)
+            ev, lab = ds.sample(key, args.serve_requests)
+            for i in range(args.serve_requests):
+                engine.submit(EventRequest(uid=i, events=ev[i],
+                                           label=int(lab[i])))
+            done = engine.run()
+            hits = sum(r.pred == r.label for r in done)
+            rep = engine.energy_report(args.dataset)
+            print(f"  serve: {len(done)} requests  acc {hits/len(done):.3f}  "
+                  f"measured ADC saving {rep['measured_adc_saving']:.2f}  "
+                  f"{rep['pj_per_sop']:.2f} pJ/SOP")
 
 
 if __name__ == "__main__":

@@ -91,11 +91,18 @@ def sops_per_step(spike_rate: float) -> float:
     return spike_rate * MACRO_ROWS * MACRO_COLS
 
 
-def kwn_step_energy(k: int, spike_rate: float, vdd: float = VDD_REF) -> EnergyBreakdown:
-    """Energy of one macro time step in KWN mode (all 128 columns)."""
+def kwn_step_energy(k: int, spike_rate: float, vdd: float = VDD_REF,
+                    adc_steps: float | None = None) -> EnergyBreakdown:
+    """Energy of one macro time step in KWN mode (all 128 columns).
+
+    ``adc_steps`` overrides the analytic early-stop fit with a *measured*
+    mean ramp step count (e.g. the fused kernel's per-row telemetry).
+    """
     s = vdd_scale(vdd)
+    if adc_steps is None:
+        adc_steps = adc_steps_early_stop(k)
     e_mac = sops_per_step(spike_rate) * E_MAC_PER_SOP * s
-    e_adc = MACRO_COLS * adc_steps_early_stop(k) * E_ADC_PER_STEP_COL * s
+    e_adc = MACRO_COLS * adc_steps * E_ADC_PER_STEP_COL * s
     e_lif = k * E_LIF_PER_UPDATE * s
     parts = e_mac + e_adc + e_lif
     e_ctrl = parts * CTRL_FRAC_KWN / (1.0 - CTRL_FRAC_KWN)

@@ -10,6 +10,19 @@ Layers larger than the physical 256(rows) x 128(cols) array are tiled onto a
 adds after conversion are what the silicon would do across macro instances),
 column tiles are independent.  ``MacroGeometry`` tracks how many physical
 macro invocations a layer costs — the energy model consumes that.
+
+Two execution paths:
+
+  * **composed** (``cim_mac`` / ``kwn_forward`` / ``nld_forward``): each
+    pipeline stage is a separate jnp/kernel call with HBM-visible
+    intermediates — use it when you need those intermediates (codebook
+    studies, noise injection, training STE paths);
+  * **fused** (``pack_kwn_weights``/``pack_nld_weights`` + ``fused_step``):
+    the whole
+    MAC -> IMA -> mode-head -> LIF step runs inside one Pallas kernel
+    (``repro.kernels.fused_macro``), the way the silicon never leaves the
+    macro.  This is the inference hot path; it is bitwise-equal to the
+    composed reference at f32 accumulation.
 """
 
 from __future__ import annotations
@@ -110,6 +123,98 @@ def nld_forward(spikes: jax.Array, dendrite_params, cfg: CIMMacroConfig,
     from repro.core import dendrite as dendrite_lib
     return dendrite_lib.dendrite_mac(
         dendrite_params, spikes, f=f, nl_cb=cb, quantize=quantize)
+
+
+# ---------------------------------------------------------------------------
+# Fused macro-step path (single Pallas kernel per time step)
+# ---------------------------------------------------------------------------
+
+class FusedMacroWeights(NamedTuple):
+    """Device-ready operands for the fused macro-step kernel.
+
+    msb/lsb:     (I, NC) int8 twin-cell planes (NC = N for KWN, J*N branch-
+                 major for NLD).
+    scale:       (NC,) per-column weight quantization scale.
+    boundaries:  (n_codes-1,) ramp thresholds.
+    levels:      (n_codes,) LUT / activation samples.
+    w_dend:      (J, N) soma combine weights, or None in KWN mode.
+    mode:        "kwn" | "nld".
+    """
+
+    msb: jax.Array
+    lsb: jax.Array
+    scale: jax.Array
+    boundaries: jax.Array
+    levels: jax.Array
+    w_dend: jax.Array | None
+    mode: str
+
+
+def pack_kwn_weights(w_int: jax.Array, scale: jax.Array,
+                     cfg: CIMMacroConfig) -> FusedMacroWeights:
+    """KWN-mode packing: int weights in [-3, 3] + per-column scale.
+
+    The NLQ ramp operates in integer MAC units (``cfg.mac_range``); the
+    per-column float scale is applied to the winner drive after the LUT
+    map-back, exactly like ``kwn_forward`` + the SNN silicon path.
+    """
+    msb, lsb = ternary_lib.weight_decompose(w_int)
+    _, nlq = _codebooks(cfg)
+    return FusedMacroWeights(
+        msb=ternary_lib.pack_ternary(msb), lsb=ternary_lib.pack_ternary(lsb),
+        scale=scale.reshape(-1).astype(jnp.float32),
+        boundaries=nlq.boundaries, levels=nlq.levels, w_dend=None, mode="kwn")
+
+
+def pack_nld_weights(dendrite_params, cfg: CIMMacroConfig,
+                     activation: str = "quadratic") -> FusedMacroWeights:
+    """NLD-mode packing: branch weights onto the twin-cell grid.
+
+    The fused NLD path stores the branch synapses the way the silicon does —
+    as 3-bit twin-cell ternary pairs with a per-(branch, column) scale — so
+    branch MACs accumulate in integer units and are rescaled to float units
+    just before the NL-activation ramp.  (The composed ``nld_forward`` keeps
+    float weights; the fused path is the more silicon-faithful of the two.)
+    Column packing is branch-major: column j*N + p is branch j of neuron p.
+    """
+    w_syn = dendrite_params.w_syn * dendrite_params.mask   # (J, I, N)
+    n_branches, n_in, n_out = w_syn.shape
+    scale = jnp.maximum(jnp.max(jnp.abs(w_syn), axis=1) / 3.0, 1e-8)  # (J, N)
+    w_int = jnp.round(jnp.clip(w_syn / scale[:, None, :], -3, 3))
+    msb, lsb = ternary_lib.weight_decompose(w_int)
+    # (J, I, NC) -> (I, J*N) branch-major flat columns
+    flat = lambda t: jnp.transpose(t, (1, 0, 2)).reshape(n_in,
+                                                         n_branches * n_out)
+    f = ima_lib.DENDRITE_ACTIVATIONS[activation]
+    cb = ima_lib.activation_codebook(cfg.code_bits, f, -cfg.mac_range,
+                                     cfg.mac_range)
+    return FusedMacroWeights(
+        msb=ternary_lib.pack_ternary(flat(msb)),
+        lsb=ternary_lib.pack_ternary(flat(lsb)),
+        scale=scale.reshape(-1).astype(jnp.float32),
+        boundaries=cb.boundaries, levels=cb.levels,
+        w_dend=dendrite_params.w_dend, mode="nld")
+
+
+def fused_step(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
+               noise: jax.Array, *, k: int = 12, drive_gain: float = 1.0,
+               beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
+               v_reset: float = 0.0, v_lim: float = 8.0,
+               use_snl: bool = True):
+    """One fused macro time step: spikes (..., I), v/noise (..., N).
+
+    Returns (v_out, spikes_out, mask, adc_steps, mac) — the LIF state update,
+    the KWN winner mask (ones in NLD mode), the per-row early-stop ADC step
+    count, and the raw integer-unit MAC for telemetry.
+    """
+    from repro.kernels import ops as kernel_ops
+    s = ternary_lib.ternary_input_encode(spikes)
+    mac, v_out, spk, mask, steps = kernel_ops.fused_macro_step(
+        s, fw.msb, fw.lsb, fw.boundaries, fw.levels, fw.scale, v, noise,
+        fw.w_dend, mode=fw.mode, k=k, drive_gain=drive_gain, beta=beta,
+        v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+        use_snl=use_snl)
+    return v_out, spk, mask, steps, mac
 
 
 def tiled_cim_mac(spikes: jax.Array, w_int: jax.Array,

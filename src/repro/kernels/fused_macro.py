@@ -1,0 +1,272 @@
+"""Pallas TPU kernel: the fused macro step (MAC -> IMA -> mode head -> LIF).
+
+The paper's efficiency story (0.8 pJ/SOP, -30 % IMA latency, 10x LIF latency)
+comes from never leaving the macro: the analog MAC result stays on the RBLs,
+the IMA converts it in place, the KWN controller gates which LIF updates run.
+The composed kernel chain (``ternary_mac`` -> ``nlq_lut`` -> ``kwn_topk`` ->
+``lif_step``) round-trips every intermediate through HBM — the exact
+anti-pattern event-driven CIM accelerators exist to avoid.  This kernel is the
+TPU-native equivalent of staying inside the macro: one grid step per
+(row-tile, K-tile) performs
+
+  1. twin-cell ternary MAC (int8 MSB/LSB planes decoded in VMEM, MXU f32
+     accumulation across the K grid axis into the ``mac`` output block);
+  2. IMA ramp conversion against the in-VMEM boundary set (linear / NLQ /
+     NL-activation — the codebook is data, so one kernel serves all three
+     ramp programs);
+  3. the mode head: KWN descending-ramp top-K with early-stop step counts
+     (``kwn`` mode) or the per-branch NL-activation + soma combine (``nld``
+     mode);
+  4. the digital LIF membrane update (leak/integrate/SNL/compare/reset),
+
+all on VREG/VMEM-resident state.  Only the final (V_mem', spikes, mask,
+adc_steps) — and the raw MAC for telemetry — touch HBM.
+
+Kernel layout / VMEM budget
+---------------------------
+Grid is ``(M/bm, K/bk)`` with K innermost; per grid step the working set is
+``bm*bk`` int8 activations, two ``bk*NC`` int8 weight planes, the
+``(bm, NC)`` f32 MAC accumulator, the 2^code_bits-entry codebook, and the
+``(bm, N)`` f32 LIF state — ~0.6 MB at the default bm=128, bk=256, N=128,
+far under the ~16 MB VMEM budget, leaving room for double buffering.  In
+``nld`` mode the weight planes carry all J branches side by side
+(``NC = J*N``) so the branch MACs come out of a single MXU contraction.
+
+When to prefer the fused step
+-----------------------------
+Inference hot loops (the SNN scan body, event-stream serving): everything the
+composed path writes to HBM between stages is dead weight there.  Prefer the
+composed path when you need the intermediates themselves (calibration sweeps,
+the Fig. 6/7 codebook studies) or gradients (training uses the STE jnp path,
+not these kernels).  ``kernels/ref.py::fused_macro_step_ref`` is the oracle:
+bitwise-identical at f32 accumulation because every MAC partial is a small
+integer (exactly representable, associativity-free) and the head is
+compare/select/LUT arithmetic mirrored operation-for-operation.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 128
+DEFAULT_BK = 256  # the macro's row count: one K-tile == one physical macro
+
+_LIF_STATICS = ("beta", "v_th1", "v_th2", "v_reset", "v_lim")
+
+
+def _accumulate_mac(x_ref, msb_ref, lsb_ref, mac_ref, *, ratio: float):
+    """Twin-cell decode + MXU MAC into the VMEM accumulator block."""
+    kk = pl.program_id(1)
+
+    @pl.when(kk == 0)
+    def _init():
+        mac_ref[...] = jnp.zeros_like(mac_ref)
+
+    x = x_ref[...].astype(jnp.float32)
+    w = ratio * msb_ref[...].astype(jnp.float32) \
+        + lsb_ref[...].astype(jnp.float32)
+    mac_ref[...] += jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+
+def _ramp_codes(x: jax.Array, bounds: jax.Array) -> jax.Array:
+    """Ramp conversion: code = #boundaries crossed (ripple-counter value)."""
+    return jnp.sum((x[:, :, None] > bounds[None, None, :]),
+                   axis=-1).astype(jnp.int32)
+
+
+def _lut_reconstruct(codes: jax.Array, levels: jax.Array,
+                     n_codes: int) -> jax.Array:
+    """LUT map-back as one-hot contraction (MXU-friendly; no VPU gather)."""
+    iota = jax.lax.broadcasted_iota(jnp.int32, (1, 1, n_codes), 2)
+    onehot = (codes[:, :, None] == iota).astype(jnp.float32)
+    return jnp.sum(onehot * levels[None, None, :], axis=-1)
+
+
+def _kwn_sweep(codes: jax.Array, k: int, n_codes: int):
+    """Descending-ramp priority-encoded top-K (same algorithm as kwn_topk)."""
+    bm, n = codes.shape
+
+    def sweep(step, carry):
+        n_found, mask, steps = carry
+        level = n_codes - 1 - step                        # descending ramp
+        crossing = (codes == level) & (mask == 0)
+        order = jnp.cumsum(crossing.astype(jnp.int32), axis=-1)
+        admit = crossing & ((n_found + order) <= k)       # priority encoder
+        mask = mask + admit.astype(jnp.int32)
+        n_found = n_found + jnp.sum(admit.astype(jnp.int32), axis=-1,
+                                    keepdims=True)
+        done_now = (n_found >= k) & (steps < 0)
+        steps = jnp.where(done_now, step, steps)
+        return n_found, mask, steps
+
+    init = (jnp.zeros((bm, 1), jnp.int32), jnp.zeros((bm, n), jnp.int32),
+            jnp.full((bm, 1), -1, jnp.int32))
+    _, mask, steps = jax.lax.fori_loop(0, n_codes, sweep, init)
+    return mask.astype(jnp.float32), jnp.where(steps < 0, n_codes - 1, steps)
+
+
+def _lif_update(v, drive, mask, noise, *, beta, v_th1, v_th2, v_reset, v_lim,
+                use_snl):
+    """Eq. (1): winners leak+integrate, non-winners hold; SNL kick; compare."""
+    v_new = jnp.where(mask > 0, beta * v + drive, v)
+    if use_snl:
+        snl = (v_new > v_th2) & (v_new < v_th1)
+        v_new = jnp.where(snl, v_new + noise, v_new)
+    v_new = jnp.clip(v_new, -v_lim, v_lim)      # 12-bit register saturation
+    spike = (v_new >= v_th1).astype(jnp.float32)
+    return jnp.where(spike > 0, v_reset, v_new), spike
+
+
+def _fused_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
+                      scale_ref, v_ref, noise_ref,
+                      mac_ref, v_out_ref, spike_ref, mask_ref, steps_ref, *,
+                      ratio, n_k, k, n_codes, beta, v_th1, v_th2, v_reset,
+                      v_lim, use_snl, drive_gain):
+    _accumulate_mac(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio)
+
+    @pl.when(pl.program_id(1) == n_k - 1)
+    def _head():
+        mac = mac_ref[...]                                # (bm, N) int-valued
+        codes = _ramp_codes(mac, bounds_ref[...][0])
+        maskf, steps = _kwn_sweep(codes, k, n_codes)
+        recon = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
+        # Winner drive: LUT value x per-column weight scale, losers exactly 0.
+        drive = recon * scale_ref[...] * maskf * drive_gain
+        v_new, spike = _lif_update(
+            v_ref[...], drive, maskf, noise_ref[...], beta=beta, v_th1=v_th1,
+            v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
+        v_out_ref[...] = v_new
+        spike_ref[...] = spike
+        mask_ref[...] = maskf
+        steps_ref[...] = steps
+
+
+def _fused_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
+                      scale_ref, w_dend_ref, v_ref, noise_ref,
+                      mac_ref, v_out_ref, spike_ref, mask_ref, steps_ref, *,
+                      ratio, n_k, n_codes, n_branches, beta, v_th1, v_th2,
+                      v_reset, v_lim, drive_gain):
+    _accumulate_mac(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio)
+
+    @pl.when(pl.program_id(1) == n_k - 1)
+    def _head():
+        mac = mac_ref[...] * scale_ref[...]               # (bm, J*N) float
+        codes = _ramp_codes(mac, bounds_ref[...][0])
+        act = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
+        bm = act.shape[0]
+        n = v_ref.shape[-1]
+        act3 = act.reshape(bm, n_branches, n)             # branch-major planes
+        w_dend = w_dend_ref[...]                          # (J, N)
+        drive = jnp.sum(act3 * w_dend[None, :, :], axis=1) * drive_gain
+        ones = jnp.ones((bm, n), jnp.float32)             # dense LIF update
+        v_new, spike = _lif_update(
+            v_ref[...], drive, ones, noise_ref[...], beta=beta, v_th1=v_th1,
+            v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=False)
+        v_out_ref[...] = v_new
+        spike_ref[...] = spike
+        mask_ref[...] = ones
+        steps_ref[...] = jnp.full((bm, 1), n_codes - 1, jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "mode", "k", "ratio", "drive_gain", "use_snl", "bm", "bk",
+    "interpret") + _LIF_STATICS)
+def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
+                     boundaries: jax.Array, levels: jax.Array,
+                     scale: jax.Array, v: jax.Array, noise: jax.Array,
+                     w_dend: jax.Array | None = None, *,
+                     mode: str = "kwn", k: int = 12, ratio: float = 2.0,
+                     drive_gain: float = 1.0, beta: float = 0.9,
+                     v_th1: float = 1.0, v_th2: float = 0.6,
+                     v_reset: float = 0.0, v_lim: float = 8.0,
+                     use_snl: bool = True, bm: int = DEFAULT_BM,
+                     bk: int = DEFAULT_BK, interpret: bool = True):
+    """One fused macro time step.
+
+    x:           (M, K) int8 ternary inputs (encoded event spikes).
+    msb/lsb:     (K, NC) int8 twin-cell planes.  ``kwn``: NC == N columns;
+                 ``nld``: NC == J*N with branch-major column packing
+                 (column j*N + p is branch j of output neuron p).
+    boundaries:  (n_codes-1,) ramp decision thresholds.
+    levels:      (n_codes,) LUT (KWN: 8-bit map-back values in integer MAC
+                 units; NLD: f(x) samples).
+    scale:       (NC,) per-column weight quantization scale.  Applied to the
+                 winner drive after conversion in ``kwn`` mode (the ramp sees
+                 integer-unit MACs); applied to the MAC before conversion in
+                 ``nld`` mode (the activation ramp sees float-unit MACs).
+    v, noise:    (M, N) f32 membrane state and pre-drawn PRBS noise.
+    w_dend:      (J, N) soma combine weights (``nld`` only).
+
+    Returns (mac (M, NC) f32, v_out (M, N) f32, spikes (M, N) f32,
+    mask (M, N) f32, adc_steps (M, 1) i32).
+    """
+    m, kdim = x.shape
+    kdim2, nc = msb.shape
+    n = v.shape[-1]
+    assert kdim == kdim2 and msb.shape == lsb.shape
+    assert m % bm == 0 and kdim % bk == 0, (m, kdim, bm, bk)
+    assert v.shape == noise.shape == (m, n)
+    n_codes = levels.shape[0]
+    assert boundaries.shape[0] == n_codes - 1
+    grid = (m // bm, kdim // bk)
+
+    row_spec = lambda shape: pl.BlockSpec(shape, lambda i, kk: (i, 0))
+    const_spec = lambda shape: pl.BlockSpec(shape, lambda i, kk: (0, 0))
+    in_specs = [
+        pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),       # x
+        pl.BlockSpec((bk, nc), lambda i, kk: (kk, 0)),       # msb
+        pl.BlockSpec((bk, nc), lambda i, kk: (kk, 0)),       # lsb
+        const_spec((1, n_codes - 1)),                        # boundaries
+        const_spec((1, n_codes)),                            # levels
+        const_spec((1, nc)),                                 # scale
+    ]
+    inputs = [x.astype(jnp.int8), msb.astype(jnp.int8), lsb.astype(jnp.int8),
+              boundaries.astype(jnp.float32).reshape(1, -1),
+              levels.astype(jnp.float32).reshape(1, -1),
+              scale.astype(jnp.float32).reshape(1, -1)]
+
+    if mode == "kwn":
+        assert nc == n, (nc, n)
+        kernel = functools.partial(
+            _fused_kwn_kernel, ratio=ratio, n_k=grid[1], k=k, n_codes=n_codes,
+            beta=beta, v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+            use_snl=use_snl, drive_gain=drive_gain)
+    elif mode == "nld":
+        assert w_dend is not None and nc % n == 0, (nc, n)
+        n_branches = nc // n
+        assert w_dend.shape == (n_branches, n)
+        in_specs.append(const_spec((n_branches, n)))         # w_dend
+        inputs.append(w_dend.astype(jnp.float32))
+        kernel = functools.partial(
+            _fused_nld_kernel, ratio=ratio, n_k=grid[1], n_codes=n_codes,
+            n_branches=n_branches, beta=beta, v_th1=v_th1, v_th2=v_th2,
+            v_reset=v_reset, v_lim=v_lim, drive_gain=drive_gain)
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    in_specs += [row_spec((bm, n)), row_spec((bm, n))]       # v, noise
+    inputs += [v.astype(jnp.float32), noise.astype(jnp.float32)]
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=[
+            row_spec((bm, nc)),                              # mac telemetry
+            row_spec((bm, n)), row_spec((bm, n)), row_spec((bm, n)),
+            row_spec((bm, 1)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, nc), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, n), jnp.float32),
+            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*inputs)

@@ -12,6 +12,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from repro.kernels import fused_macro as _fused
 from repro.kernels import kwn_topk as _kwn
 from repro.kernels import lif_step as _lif
 from repro.kernels import nlq_lut as _nlq
@@ -81,6 +82,44 @@ def lif_step(v, drive, mask, noise, **params):
     v_out, spikes = _lif.lif_step_fused(*padded, bm=bm, interpret=INTERPRET,
                                         **params)
     return v_out[:m0].reshape(*lead, n), spikes[:m0].reshape(*lead, n)
+
+
+def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise,
+                     w_dend=None, *, mode: str = "kwn", k: int = 12,
+                     ratio: float = 2.0, drive_gain: float = 1.0,
+                     beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
+                     v_reset: float = 0.0, v_lim: float = 8.0,
+                     use_snl: bool = True, bm: int | None = None,
+                     bk: int | None = None):
+    """Batched fused macro step; x (..., K), v/noise (..., N).
+
+    Pads the batch to the row tile and K to the macro row count (zero
+    padding is MAC-neutral), runs the fused kernel, and slices the padding
+    back off.  Returns (mac (..., NC), v_out, spikes, mask (..., N),
+    adc_steps (...,)).
+    """
+    lead = x.shape[:-1]
+    n = v.shape[-1]
+    nc = msb.shape[-1]
+    xm = x.reshape(-1, x.shape[-1])
+    vm = v.reshape(-1, n)
+    nm = noise.reshape(-1, n)
+    bm_ = bm or min(_fused.DEFAULT_BM, _ceil_mult(xm.shape[0], 8))
+    bk_ = bk or _fused.DEFAULT_BK
+    xm, m0 = _pad_to(xm, 0, bm_)
+    xm, _ = _pad_to(xm, 1, bk_)
+    msb_p, _ = _pad_to(msb, 0, bk_)
+    lsb_p, _ = _pad_to(lsb, 0, bk_)
+    vm, _ = _pad_to(vm, 0, bm_)
+    nm, _ = _pad_to(nm, 0, bm_)
+    mac, v_out, spikes, mask, steps = _fused.fused_macro_step(
+        xm, msb_p, lsb_p, boundaries, levels, scale, vm, nm, w_dend,
+        mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
+        v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+        use_snl=use_snl, bm=bm_, bk=bk_, interpret=INTERPRET)
+    return (mac[:m0].reshape(*lead, nc), v_out[:m0].reshape(*lead, n),
+            spikes[:m0].reshape(*lead, n), mask[:m0].reshape(*lead, n),
+            steps[:m0, 0].reshape(lead))
 
 
 def nlq_convert(x, boundaries, levels):

@@ -47,3 +47,51 @@ def nlq_convert_ref(x, boundaries, levels):
     # kernel uses strict '>' compare: match searchsorted side for exact ties
     code = jnp.sum(x[..., None] > boundaries, axis=-1).astype(jnp.int32)
     return code, jnp.take(levels, code)
+
+
+def fused_macro_step_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
+                         w_dend=None, *, mode: str = "kwn", k: int = 12,
+                         ratio: float = 2.0, drive_gain: float = 1.0,
+                         beta: float = 0.9, v_th1: float = 1.0,
+                         v_th2: float = 0.6, v_reset: float = 0.0,
+                         v_lim: float = 8.0, use_snl: bool = True):
+    """Composed jnp oracle for the fused macro step (kernels/fused_macro.py).
+
+    Same stage sequence — twin-cell MAC, IMA ramp conversion, mode head
+    (KWN descending-ramp top-K / NLD branch activation + soma combine),
+    LIF update — expressed through the core-library semantics, with every
+    arithmetic step mirrored so the fused kernel matches *bitwise* at f32:
+    the MAC partials are small integers (exact in f32, associativity-free)
+    and the head is compare/select/LUT arithmetic.
+
+    Returns (mac, v_out, spikes, mask, adc_steps) like the kernel, with
+    adc_steps shaped (..., 1).
+    """
+    # in_lo/in_hi are only consumed by the noise model, not by
+    # convert/reconstruct/select — keep the oracle jit-friendly.
+    cb = ima_lib.RampCodebook(
+        levels=jnp.asarray(levels, jnp.float32),
+        boundaries=jnp.asarray(boundaries, jnp.float32),
+        in_lo=0.0, in_hi=0.0)
+    mac = ternary_mac_ref(x, msb, lsb, ratio=ratio)
+    if mode == "kwn":
+        codes = ima_lib.ima_convert(mac, cb)
+        res = kwn_lib.kwn_select(mac, k, cb)
+        mask, steps = res.mask, res.adc_steps[..., None]
+        recon = ima_lib.ima_reconstruct(codes, cb)
+        drive = recon * scale * mask * drive_gain
+    elif mode == "nld":
+        n_branches, n = w_dend.shape
+        mac_f = mac * scale
+        act = ima_lib.ima_quantize(mac_f, cb)
+        act3 = act.reshape(act.shape[:-1] + (n_branches, n))
+        drive = jnp.sum(act3 * w_dend, axis=-2) * drive_gain
+        mask = jnp.ones(v.shape, jnp.float32)
+        steps = jnp.full(v.shape[:-1] + (1,), cb.n_codes - 1, jnp.int32)
+        use_snl = False
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+    v_out, spikes = lif_step_ref(v, drive, mask, noise, beta=beta,
+                                 v_th1=v_th1, v_th2=v_th2, v_reset=v_reset,
+                                 v_lim=v_lim, use_snl=use_snl)
+    return mac, v_out, spikes, mask, steps

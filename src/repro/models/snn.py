@@ -128,8 +128,18 @@ def _quantized_weights(p, cfg: SNNConfig):
 def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
                     mode: str | None = None, k: int | None = None,
                     use_snl: bool | None = None,
-                    noise: ima_lib.IMANoiseModel | None = None):
+                    noise: ima_lib.IMANoiseModel | None = None,
+                    fused: bool = False):
     """Inference through the macro simulator (KWN Eq. 1 / NLD Eq. 2).
+
+    ``fused=True`` runs each scan-body time step through the single fused
+    Pallas kernel (MAC -> IMA -> mode head -> LIF in one VMEM pass,
+    ``repro.kernels.fused_macro``) instead of the composed stage chain.  In
+    KWN mode the fused step is bitwise-equal to the composed path at f32;
+    in NLD mode it additionally quantizes the branch weights onto the
+    twin-cell grid (the silicon storage format), so accuracies can differ
+    slightly from the float-weight composed path.  The IMA noise model needs
+    per-step Gaussian draws, so ``noise`` forces the composed path.
 
     Returns (logits, telemetry) where telemetry carries adc_steps per time
     step (early-stop latency), LIF update counts, and SOP counts for the
@@ -138,6 +148,7 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
     mode = mode or cfg.mode
     k = k or cfg.k
     use_snl = cfg.use_snl if use_snl is None else use_snl
+    fused = fused and noise is None
     b = events.shape[0]
     mcfg = macro_lib.CIMMacroConfig(
         code_bits=cfg.code_bits,
@@ -145,6 +156,9 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
         ima_noise=noise)
     lif_p = lif_lib.LIFParams(beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
                               noise_amp=cfg.noise_amp if use_snl else 0.0)
+    if fused:
+        return _forward_silicon_fused(p, events, cfg, mode, k, use_snl, mcfg,
+                                      lif_p)
     if mode == "kwn":
         w_int, scale = _quantized_weights(p, cfg)
         nlq = _nlq_cb(cfg)
@@ -191,6 +205,53 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
         step, init, (jnp.moveaxis(events, 1, 0), keys))
     logits = (counts / cfg.n_steps) @ p["w_out"]
     tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)  # per-step means
+    return logits, tele
+
+
+def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
+                           use_snl: bool, mcfg, lif_p):
+    """Fused-kernel inference scan body (noise-free silicon path).
+
+    Mirrors the composed ``forward_silicon`` step exactly: same PRBS state
+    threading, same telemetry, one fused Pallas kernel per time step.
+    """
+    b = events.shape[0]
+    if mode == "kwn":
+        w_int, scale = _quantized_weights(p, cfg)
+        fw = macro_lib.pack_kwn_weights(w_int, scale.reshape(-1), mcfg)
+    else:
+        fw = macro_lib.pack_nld_weights(p["dend"], mcfg,
+                                        activation=cfg.activation)
+    snl_active = use_snl and mode == "kwn"
+
+    def step(carry, ev):
+        v, prbs_state, spk_acc, tele = carry
+        if snl_active:
+            prbs_state, nz = prbs_lib.prbs_noise(prbs_state, v.shape,
+                                                 lif_p.noise_amp)
+        else:
+            nz = jnp.zeros_like(v)
+        v, s, mask, steps, _ = macro_lib.fused_step(
+            ev, fw, v, nz, k=k, drive_gain=cfg.drive_gain, beta=cfg.beta,
+            v_th1=cfg.v_th1, v_th2=cfg.v_th2, v_reset=lif_p.v_reset,
+            v_lim=2.0 ** (lif_p.vmem_bits - 1) / 256.0,  # == _vmem_clip
+            use_snl=snl_active)
+        n_upd = float(k if mode == "kwn" else cfg.n_hidden)
+        tele = {
+            "adc_steps": tele["adc_steps"] + steps.astype(jnp.float32),
+            "lif_updates": tele["lif_updates"] + n_upd,
+            "sops": tele["sops"] + jnp.sum(jnp.abs(ev), -1) * cfg.n_hidden,
+        }
+        return (v, prbs_state, spk_acc + s, tele), None
+
+    tele0 = {"adc_steps": jnp.zeros((b,)), "lif_updates": jnp.zeros((b,)),
+             "sops": jnp.zeros((b,))}
+    st0 = lif_lib.lif_init((b, cfg.n_hidden))
+    init = (st0.v_mem, st0.prbs_state, jnp.zeros((b, cfg.n_hidden)), tele0)
+    (_, _, counts, tele), _ = jax.lax.scan(step, init,
+                                           jnp.moveaxis(events, 1, 0))
+    logits = (counts / cfg.n_steps) @ p["w_out"]
+    tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)
     return logits, tele
 
 

@@ -1,6 +1,7 @@
-"""Serving: jit-able serve_step (one decode token for a batch of requests) and
-a small batched engine (prompt queue -> prefill -> decode rounds) used by the
-serving example and tests.
+"""Serving: jit-able serve_step (one decode token for a batch of requests), a
+small batched engine (prompt queue -> prefill -> decode rounds) used by the
+serving example and tests, and a batched event-stream engine that runs SNN
+inference through the fused macro-step kernel.
 
 serve_step is what the decode_32k / long_500k dry-run cells lower: one new
 token against a KV cache of the cell's sequence length.
@@ -14,7 +15,9 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 
+from repro.core import energy as energy_lib
 from repro.models import lm
+from repro.models import snn as snn_lib
 
 
 def build_serve_step(cfg: lm.LMConfig, mesh=None, *, temperature: float = 0.0):
@@ -43,6 +46,95 @@ class Request:
     @property
     def done(self) -> bool:
         return len(self.generated) >= self.max_new_tokens
+
+
+@dataclasses.dataclass
+class EventRequest:
+    """One event-stream classification request: events (T, N_in) in {-1,0,1}."""
+
+    uid: int
+    events: Any                 # (T, N_in) array-like
+    label: int | None = None
+    logits: Any = None
+    pred: int | None = None
+    adc_steps: float | None = None   # mean early-stop ramp steps per time step
+
+
+class SNNEventEngine:
+    """Batched event-stream inference on the fused macro-step kernel.
+
+    The hot loop is one jitted ``forward_silicon(fused=True)`` call per full
+    batch: the scan body runs the entire MAC -> IMA -> KWN/NLD -> LIF
+    pipeline inside a single Pallas kernel per time step, so serving cost per
+    request is one kernel launch per (time step, row tile) with no
+    HBM-visible intermediates.  Requests are padded to fixed ``batch_slots``
+    (dummy rows are all-zero event streams) so the jit cache holds exactly
+    one entry.
+    """
+
+    def __init__(self, cfg: snn_lib.SNNConfig, params, batch_slots: int = 64,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.b = batch_slots
+        self.pending: list[EventRequest] = []
+        self.completed: list[EventRequest] = []
+        self._key = jax.random.PRNGKey(seed)
+        self._fwd = jax.jit(
+            lambda p, ev, key: snn_lib.forward_silicon(p, ev, cfg, key,
+                                                       fused=True))
+
+    def submit(self, req: EventRequest):
+        self.pending.append(req)
+
+    def _run_batch(self, reqs: list[EventRequest]):
+        ev = jnp.stack([jnp.asarray(r.events, jnp.float32) for r in reqs])
+        pad = self.b - ev.shape[0]
+        if pad:
+            ev = jnp.concatenate(
+                [ev, jnp.zeros((pad,) + ev.shape[1:], ev.dtype)])
+        self._key, sub = jax.random.split(self._key)
+        logits, tele = self._fwd(self.params, ev, sub)
+        preds = jnp.argmax(logits, axis=-1)
+        for i, req in enumerate(reqs):
+            req.logits = logits[i]
+            req.pred = int(preds[i])
+            req.adc_steps = float(tele["adc_steps"][i])
+            self.completed.append(req)
+
+    def run(self) -> list[EventRequest]:
+        """Drain the queue in fixed-size batches; returns completed requests."""
+        while self.pending:
+            batch, self.pending = self.pending[:self.b], self.pending[self.b:]
+            self._run_batch(batch)
+        return self.completed
+
+    def energy_report(self, dataset: str) -> dict:
+        """Serving-side energy estimate from *measured* early-stop statistics.
+
+        Uses the calibrated per-component model (core.energy) but replaces
+        the analytic early-stop saving with the mean ADC step count the KWN
+        controller actually reported for the served traffic.
+        """
+        done = [r for r in self.completed if r.adc_steps is not None]
+        if not done or self.cfg.mode != "kwn":
+            return {}
+        if dataset not in energy_lib.SPIKE_RATES:
+            raise ValueError(
+                f"unknown dataset {dataset!r} for the calibrated spike rate; "
+                f"expected one of {sorted(energy_lib.SPIKE_RATES)}")
+        mean_steps = sum(r.adc_steps for r in done) / len(done)
+        full = 2 ** self.cfg.code_bits - 1
+        spike_rate = energy_lib.SPIKE_RATES[dataset]
+        bd = energy_lib.kwn_step_energy(self.cfg.k, spike_rate,
+                                        adc_steps=mean_steps)
+        return {
+            "requests": len(done),
+            "mean_adc_steps": mean_steps,
+            "measured_adc_saving": 1.0 - mean_steps / full,
+            "pj_per_step": bd.total,
+            "pj_per_sop": bd.total / energy_lib.sops_per_step(spike_rate),
+        }
 
 
 class BatchedEngine:

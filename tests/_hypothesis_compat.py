@@ -1,0 +1,44 @@
+"""Optional-dependency shim for ``hypothesis``.
+
+The property-based tests are a bonus tier: when ``hypothesis`` is installed
+they run for real; when it is not (the minimal CI image), the ``@given`` tests
+are collected and skipped instead of blowing up the whole module at import
+time.  Import ``given``/``settings``/``st`` from here, never from
+``hypothesis`` directly.
+"""
+
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only on minimal images
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        """Accepts any strategy constructor call; the value is never drawn."""
+
+        def __getattr__(self, name):
+            def _strategy(*args, **kwargs):
+                return None
+            return _strategy
+
+    st = _AnyStrategy()
+
+    def given(*_args, **_kwargs):
+        def deco(fn):
+            # *args-only signature so pytest requests no fixtures for the
+            # original hypothesis-driven parameters.
+            def wrapper(*args, **kwargs):
+                pytest.skip("hypothesis not installed")
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            return wrapper
+        return deco
+
+    def settings(*_args, **_kwargs):
+        def deco(fn):
+            return fn
+        return deco

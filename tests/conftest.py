@@ -1,0 +1,52 @@
+"""Shared test setup: deterministic seeding, JAX platform config, and the
+``slow`` marker for the long-running system/pipeline tiers.
+
+Run with ``PYTHONPATH=src python -m pytest -x -q``; deselect the slow tier
+with ``-m "not slow"`` for a fast inner loop.
+"""
+
+from __future__ import annotations
+
+import os
+import random
+
+# Platform setup must happen before jax initializes a backend: this repo's
+# CI container is CPU-only, and the kernels run with interpret=True there.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=1")
+
+import jax
+import numpy as np
+import pytest
+
+# All oracles/kernels are specified at f32 accumulation; keep x64 off so a
+# user-level JAX_ENABLE_X64 cannot silently change parity tolerances.
+jax.config.update("jax_enable_x64", False)
+
+SLOW_MODULES = {
+    # subprocess multi-device simulations + full training loops
+    "test_dist.py",
+    "test_pipeline.py",
+    "test_system.py",
+    "test_fault_tolerance.py",
+}
+
+
+def pytest_collection_modifyitems(config, items):
+    for item in items:
+        if os.path.basename(str(item.fspath)) in SLOW_MODULES:
+            item.add_marker(pytest.mark.slow)
+
+
+@pytest.fixture(autouse=True)
+def _deterministic_seeds():
+    """Seed the non-JAX RNGs per test (JAX keys are explicit everywhere)."""
+    random.seed(0)
+    np.random.seed(0)
+    yield
+
+
+@pytest.fixture
+def rng():
+    """Canonical per-test PRNG key."""
+    return jax.random.PRNGKey(0)
