@@ -1,0 +1,14 @@
+# Test tiers.  `make smoke` is the tier-1 inner loop (<60 s): core
+# semantics, kernel parity smoke, golden regressions, roofline.  `make test`
+# is the full suite (~10 min; the slow tier spawns multi-device
+# subprocesses and training loops).
+
+PYTEST := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest
+
+.PHONY: smoke test
+
+smoke:
+	$(PYTEST) -q -m "fast and not slow"
+
+test:
+	$(PYTEST) -x -q

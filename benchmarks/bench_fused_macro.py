@@ -1,9 +1,20 @@
-"""Fused macro-step kernel vs the composed kernel chain.
+"""Fused macro kernel vs the composed kernel chain, across three axes.
 
-Wall-clock: one fused Pallas kernel (MAC -> IMA -> KWN -> LIF, VMEM-resident)
-against the four-kernel composed path (``ternary_mac`` -> ``nlq_convert`` ->
-``kwn_topk`` -> ``lif_step``) that round-trips every intermediate through HBM.
-Default geometry is the paper's physical macro: 256 rows x 128 columns.
+1. **step**: one fused Pallas kernel (MAC -> IMA -> KWN -> LIF,
+   VMEM-resident) against the four-kernel composed path (``ternary_mac`` ->
+   ``nlq_convert`` -> ``kwn_topk`` -> ``lif_step``) that round-trips every
+   intermediate through HBM.  Geometry: the paper's physical macro,
+   256 rows x 128 columns.
+2. **large_layer**: the same comparison on a 512x256 layer (2x2 virtual
+   macro grid) — the fused path now tiles rows/columns *inside* the kernel
+   (digital partial-sum accumulation) instead of falling back to the
+   composed chain.
+3. **sequence**: a T-step event stream through (a) one time-major fused
+   launch (T folded into the kernel grid, LIF membrane carried in VMEM),
+   (b) a jitted scan of per-step fused launches (the PR 1 cadence), and
+   (c) eager per-step launches (the streaming cadence where every time
+   step pays Python dispatch + kernel setup — what an event-driven server
+   pays when it cannot batch the sequence).
 
 Also emits the measured KWN early-stop step statistics (histogram + mean) the
 energy model consumes — the fused kernel reports them per row, so the energy
@@ -18,7 +29,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import energy, ima as ima_lib
+from repro.core import energy, ima as ima_lib, macro as macro_lib
 from repro.kernels import ops
 
 M, N_IN, N_OUT = 128, 256, 128   # batch x the physical macro geometry
@@ -29,17 +40,22 @@ DRIVE_GAIN = 0.25
 
 SPIKE_RATE = 0.05   # event-stream duty cycle: MACs land inside the ramp range
 
+T_SEQ = 32                       # sequence sweep length
+LARGE_N_IN, LARGE_N_OUT = 512, 256   # 2x2 virtual macro grid
 
-def _operands(key):
+
+def _operands(key, m=M, n_in=N_IN, n_out=N_OUT, t=None):
     ks = jax.random.split(key, 7)
     tern = lambda k, s: jax.random.randint(k, s, -1, 2).astype(jnp.int8)
-    sparse = (jax.random.uniform(ks[6], (M, N_IN)) < SPIKE_RATE)
-    x = (tern(ks[0], (M, N_IN)) * sparse).astype(jnp.int8)
-    msb, lsb = tern(ks[1], (N_IN, N_OUT)), tern(ks[2], (N_IN, N_OUT))
+    xshape = (m, n_in) if t is None else (t, m, n_in)
+    sparse = (jax.random.uniform(ks[6], xshape) < SPIKE_RATE)
+    x = (tern(ks[0], xshape) * sparse).astype(jnp.int8)
+    msb, lsb = tern(ks[1], (n_in, n_out)), tern(ks[2], (n_in, n_out))
     cb = ima_lib.nlq_codebook(CODE_BITS, -24, 24)
-    scale = jax.random.uniform(ks[3], (N_OUT,), minval=0.05, maxval=0.3)
-    v = jax.random.normal(ks[4], (M, N_OUT)) * 0.5
-    noise = 0.05 * jnp.sign(jax.random.normal(ks[5], (M, N_OUT)))
+    scale = jax.random.uniform(ks[3], (n_out,), minval=0.05, maxval=0.3)
+    v = jax.random.normal(ks[4], (m, n_out)) * 0.5
+    nshape = (m, n_out) if t is None else (t, m, n_out)
+    noise = 0.05 * jnp.sign(jax.random.normal(ks[5], nshape))
     return x, msb, lsb, cb, scale, v, noise
 
 
@@ -70,10 +86,65 @@ def _time(fn, args, iters: int = 20) -> float:
     return (time.perf_counter() - t0) / iters * 1e6
 
 
-def run() -> dict:
-    x, msb, lsb, cb, scale, v, noise = _operands(jax.random.PRNGKey(0))
-    args = (x, msb, lsb, cb, scale, v, noise)
+def _seq_variants(t=T_SEQ, m=M, n_in=N_IN, n_out=N_OUT):
+    """Time-major vs per-step cadences for a whole event sequence."""
+    x, msb, lsb, cb, scale, v, noise = _operands(
+        jax.random.PRNGKey(1), m=m, n_in=n_in, n_out=n_out, t=t)
+    kw = dict(mode="kwn", k=K_WIN, drive_gain=DRIVE_GAIN)
 
+    @jax.jit
+    def seq(x, v):
+        return ops.fused_macro_seq(x, msb, lsb, cb.boundaries, cb.levels,
+                                   scale, v, noise, **kw)
+
+    @jax.jit
+    def step_scan(x, v):
+        def body(vc, inp):
+            xt, nt = inp
+            _, v_out, spk, _, steps = ops.fused_macro_step(
+                xt, msb, lsb, cb.boundaries, cb.levels, scale, vc, nt, **kw)
+            return v_out, (spk, steps)
+        return jax.lax.scan(body, v, (x, noise))
+
+    def step_eager(x, v):
+        outs = []
+        for tt in range(t):
+            _, v, spk, _, steps = ops.fused_macro_step(
+                x[tt], msb, lsb, cb.boundaries, cb.levels, scale, v,
+                noise[tt], **kw)
+            outs.append((spk, steps))
+        return v, outs
+
+    args = (x, v)
+    ms_seq = _time(seq, args, iters=5) / 1e3
+    ms_scan = _time(step_scan, args, iters=5) / 1e3
+    ms_eager = _time(step_eager, args, iters=3) / 1e3
+
+    # parity: the three cadences must agree bitwise on the final membrane
+    v_seq = seq(x, v)[1]
+    v_scan = step_scan(x, v)[0]
+    v_eager = step_eager(x, v)[0]
+    return {
+        "t": t, "batch": m, "geometry": f"{n_in}x{n_out}",
+        "ms_time_major": round(ms_seq, 1),
+        "ms_per_step_scan": round(ms_scan, 1),
+        "ms_per_step_eager": round(ms_eager, 1),
+        "steps_per_s_time_major": round(t / (ms_seq / 1e3), 1),
+        "steps_per_s_per_step_scan": round(t / (ms_scan / 1e3), 1),
+        "speedup_vs_scan": round(ms_scan / ms_seq, 2),
+        "speedup_vs_eager_launches": round(ms_eager / ms_seq, 2),
+        "parity": {
+            "scan_equal": bool(jnp.array_equal(v_seq, v_scan)),
+            "eager_equal": bool(jnp.array_equal(v_seq, v_eager)),
+        },
+    }
+
+
+def _step_comparison(m, n_in, n_out, key):
+    """Fused-vs-composed single step at a given layer geometry."""
+    x, msb, lsb, cb, scale, v, noise = _operands(key, m=m, n_in=n_in,
+                                                 n_out=n_out)
+    args = (x, msb, lsb, cb, scale, v, noise)
     fused = _fused_step(*args)
     composed = _composed_step(*args)
     parity = {
@@ -81,9 +152,27 @@ def run() -> dict:
         "mask_equal": bool(jnp.array_equal(fused[2], composed[2])),
         "steps_equal": bool(jnp.array_equal(fused[3], composed[3])),
     }
-
     us_fused = _time(_fused_step, args)
     us_composed = _time(_composed_step, args)
+    return fused, parity, us_fused, us_composed
+
+
+def run() -> dict:
+    fused, parity, us_fused, us_composed = _step_comparison(
+        M, N_IN, N_OUT, jax.random.PRNGKey(0))
+
+    # Large layer: 2x2 virtual macro grid, fused stays in-kernel (tiled).
+    _, big_parity, us_big_fused, us_big_composed = _step_comparison(
+        M, LARGE_N_IN, LARGE_N_OUT, jax.random.PRNGKey(2))
+    cb = ima_lib.nlq_codebook(CODE_BITS, -24, 24)
+    big_fw = macro_lib.FusedMacroWeights(
+        msb=jnp.zeros((LARGE_N_IN, LARGE_N_OUT), jnp.int8),
+        lsb=jnp.zeros((LARGE_N_IN, LARGE_N_OUT), jnp.int8),
+        scale=jnp.ones((LARGE_N_OUT,)), boundaries=cb.boundaries,
+        levels=cb.levels, w_dend=None, mode="kwn")
+    big_plan, big_geo = macro_lib.plan_fused_tiles(M, big_fw, LARGE_N_OUT)
+
+    seq_stats = _seq_variants()
 
     # Early-stop statistics the energy model consumes (measured, per row).
     steps = np.asarray(fused[3]).reshape(-1)
@@ -99,6 +188,17 @@ def run() -> dict:
         "us_composed": round(us_composed, 1),
         "speedup": round(us_composed / us_fused, 2),
         "parity": parity,
+        "large_layer": {
+            "geometry": f"{LARGE_N_IN}x{LARGE_N_OUT}", "batch": M,
+            "virtual_macros": big_geo.n_macros,
+            "tile_grid": list(big_plan.grid),
+            "vmem_resident_kb": round(big_plan.vmem_resident_bytes / 1024, 1),
+            "us_fused_tiled": round(us_big_fused, 1),
+            "us_composed": round(us_big_composed, 1),
+            "speedup": round(us_big_composed / us_big_fused, 2),
+            "parity": big_parity,
+        },
+        "sequence": seq_stats,
         "early_stop": {
             "mean_adc_steps": round(mean_steps, 2),
             "full_ramp_steps": full,

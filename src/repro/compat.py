@@ -1,0 +1,45 @@
+"""Version shims for jax API drift.
+
+The repo targets current jax but must run on the pinned container jax as
+well; three APIs moved underneath us:
+
+* ``jax.shard_map`` (new) vs ``jax.experimental.shard_map.shard_map`` (old),
+  with the replication-check kwarg renamed ``check_rep`` -> ``check_vma``;
+* ``jax.sharding.AxisType`` (new explicit-sharding mesh axis types) does not
+  exist on older jax — ``make_mesh`` here passes ``axis_types`` only when the
+  running jax knows about it;
+* ``Compiled.cost_analysis()`` returns a bare dict on older jax and a
+  one-element list of dicts on newer jax.
+
+Import from here, never feature-detect at call sites.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(fn, mesh, in_specs, out_specs, check: bool = False):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` on old."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(fn, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types where the API supports them."""
+    if hasattr(jax.sharding, "AxisType"):
+        axis_types = (jax.sharding.AxisType.Auto,) * len(axis_names)
+        return jax.make_mesh(axis_shapes, axis_names, axis_types=axis_types)
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """Normalize ``Compiled.cost_analysis()`` to a single per-module dict."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, dict):
+        return ca
+    return ca[0] if ca else {}

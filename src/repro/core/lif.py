@@ -61,9 +61,16 @@ def _spike_bwd(res, g):
 spike_fn.defvjp(_spike_fwd, _spike_bwd)
 
 
+def vmem_limit(bits: int) -> float:
+    """Signed V_mem register full scale in threshold-normalized units
+    (``bits`` wide with 8 fractional bits).  The fused kernels clip to this
+    same value — single source so the bitwise-parity contract can't drift."""
+    return float(2 ** (bits - 1)) / 256.0
+
+
 def _vmem_clip(v: jax.Array, bits: int) -> jax.Array:
     """12-bit signed register saturation (in threshold-normalized units)."""
-    lim = float(2 ** (bits - 1)) / 256.0  # 12b with 8 fractional bits
+    lim = vmem_limit(bits)
     return jnp.clip(v, -lim, lim)
 
 

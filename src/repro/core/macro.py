@@ -17,12 +17,17 @@ Two execution paths:
     pipeline stage is a separate jnp/kernel call with HBM-visible
     intermediates — use it when you need those intermediates (codebook
     studies, noise injection, training STE paths);
-  * **fused** (``pack_kwn_weights``/``pack_nld_weights`` + ``fused_step``):
-    the whole
-    MAC -> IMA -> mode-head -> LIF step runs inside one Pallas kernel
-    (``repro.kernels.fused_macro``), the way the silicon never leaves the
-    macro.  This is the inference hot path; it is bitwise-equal to the
-    composed reference at f32 accumulation.
+  * **fused** (``pack_kwn_weights``/``pack_nld_weights`` + ``fused_step`` /
+    ``fused_seq``): the whole MAC -> IMA -> mode-head -> LIF step runs
+    inside one Pallas kernel (``repro.kernels.fused_macro``), the way the
+    silicon never leaves the macro.  Layers wider than one 256x128 macro
+    are tiled onto the virtual macro grid *inside* the kernel (column tiles
+    + K tiles with digital partial-sum accumulation), and ``fused_seq``
+    folds the whole event sequence into one launch with the LIF membrane
+    carried in VMEM across time steps.  This is the inference hot path; it
+    is bitwise-equal to the composed reference at f32 accumulation.
+    ``plan_fused_tiles`` exposes the tile planner (padding, grid, VMEM
+    footprint, macro-invocation count for the energy model).
 """
 
 from __future__ import annotations
@@ -196,6 +201,22 @@ def pack_nld_weights(dendrite_params, cfg: CIMMacroConfig,
         w_dend=dendrite_params.w_dend, mode="nld")
 
 
+def plan_fused_tiles(batch: int, fw: FusedMacroWeights, n_out: int,
+                     n_steps: int = 1):
+    """Tile plan + macro accounting for one fused launch.
+
+    Returns (plan, geometry): the kernel-facing ``TilePlan`` (block sizes,
+    padded shapes, grid, resident VMEM bytes) and the ``MacroGeometry`` the
+    energy model consumes (physical macro invocations for the layer).
+    """
+    from repro.kernels import fused_macro as fused_kernel
+    n_in, nc = fw.msb.shape
+    n_branches = nc // n_out if fw.mode == "nld" else 1
+    plan = fused_kernel.plan_tiles(batch, n_in, nc, n_out, n_steps,
+                                   mode=fw.mode, n_branches=n_branches)
+    return plan, geometry(n_in, nc)
+
+
 def fused_step(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
                noise: jax.Array, *, k: int = 12, drive_gain: float = 1.0,
                beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
@@ -210,6 +231,29 @@ def fused_step(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
     from repro.kernels import ops as kernel_ops
     s = ternary_lib.ternary_input_encode(spikes)
     mac, v_out, spk, mask, steps = kernel_ops.fused_macro_step(
+        s, fw.msb, fw.lsb, fw.boundaries, fw.levels, fw.scale, v, noise,
+        fw.w_dend, mode=fw.mode, k=k, drive_gain=drive_gain, beta=beta,
+        v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+        use_snl=use_snl)
+    return v_out, spk, mask, steps, mac
+
+
+def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
+              noise: jax.Array, *, k: int = 12, drive_gain: float = 1.0,
+              beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
+              v_reset: float = 0.0, v_lim: float = 8.0,
+              use_snl: bool = True):
+    """A whole fused event sequence: spikes (T, ..., I), v (..., N),
+    noise (T, ..., N).
+
+    One kernel launch covers all T time steps (time-major grid axis, LIF
+    membrane carried in VMEM) and any virtual-macro tiling the layer needs.
+    Returns (v_out (..., N), spikes_out (T, ..., N), mask (T, ..., N),
+    adc_steps (T, ...), mac (T, ..., NC)).
+    """
+    from repro.kernels import ops as kernel_ops
+    s = ternary_lib.ternary_input_encode(spikes)
+    mac, v_out, spk, mask, steps = kernel_ops.fused_macro_seq(
         s, fw.msb, fw.lsb, fw.boundaries, fw.levels, fw.scale, v, noise,
         fw.w_dend, mode=fw.mode, k=k, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,

@@ -1,0 +1,2 @@
+"""Distribution strategies that live outside the model graph: pipeline
+parallelism (GPipe schedule over a stage-sharded mesh axis)."""

@@ -1,4 +1,5 @@
-"""Pallas TPU kernel: the fused macro step (MAC -> IMA -> mode head -> LIF).
+"""Pallas TPU kernel: the fused macro step (MAC -> IMA -> mode head -> LIF),
+tiled over a virtual macro grid and batched over time.
 
 The paper's efficiency story (0.8 pJ/SOP, -30 % IMA latency, 10x LIF latency)
 comes from never leaving the macro: the analog MAC result stays on the RBLs,
@@ -7,30 +8,51 @@ The composed kernel chain (``ternary_mac`` -> ``nlq_lut`` -> ``kwn_topk`` ->
 ``lif_step``) round-trips every intermediate through HBM — the exact
 anti-pattern event-driven CIM accelerators exist to avoid.  This kernel is the
 TPU-native equivalent of staying inside the macro: one grid step per
-(row-tile, K-tile) performs
+(row-tile, time-step, col-tile, K-tile) performs
 
   1. twin-cell ternary MAC (int8 MSB/LSB planes decoded in VMEM, MXU f32
-     accumulation across the K grid axis into the ``mac`` output block);
-  2. IMA ramp conversion against the in-VMEM boundary set (linear / NLQ /
+     accumulation across the K grid axis into the column tile's slice of the
+     full-width ``mac`` accumulator — digital partial-sum accumulation, the
+     way the silicon adds converted row-tile partials across macro
+     instances);
+  2. on the last (col-tile, K-tile) of a time step, IMA ramp conversion of
+     the whole accumulator against the in-VMEM boundary set (linear / NLQ /
      NL-activation — the codebook is data, so one kernel serves all three
      ramp programs);
   3. the mode head: KWN descending-ramp top-K with early-stop step counts
      (``kwn`` mode) or the per-branch NL-activation + soma combine (``nld``
      mode);
   4. the digital LIF membrane update (leak/integrate/SNL/compare/reset),
+     with the membrane carried in VMEM across the whole T axis,
 
-all on VREG/VMEM-resident state.  Only the final (V_mem', spikes, mask,
-adc_steps) — and the raw MAC for telemetry — touch HBM.
+all on VREG/VMEM-resident state.  Only the per-step (spikes, mask,
+adc_steps) — and the raw MAC for telemetry — touch HBM; the LIF membrane is
+written back once per row tile, after the last time step.
 
 Kernel layout / VMEM budget
 ---------------------------
-Grid is ``(M/bm, K/bk)`` with K innermost; per grid step the working set is
-``bm*bk`` int8 activations, two ``bk*NC`` int8 weight planes, the
-``(bm, NC)`` f32 MAC accumulator, the 2^code_bits-entry codebook, and the
-``(bm, N)`` f32 LIF state — ~0.6 MB at the default bm=128, bk=256, N=128,
-far under the ~16 MB VMEM budget, leaving room for double buffering.  In
-``nld`` mode the weight planes carry all J branches side by side
-(``NC = J*N``) so the branch MACs come out of a single MXU contraction.
+Grid is ``(M/bm, T, NC/bn, K/bk)`` with K innermost, then column tiles, then
+time.  Per grid step the streamed working set is the ``bm x bk`` int8
+activation block and two ``bk x bn`` int8 weight planes (the Pallas pipeline
+double-buffers these across grid steps, so weight-plane DMA overlaps the MXU
+contraction); resident across a time step are the full-width ``(bm, NC)``
+f32 MAC accumulator, the 2^code_bits-entry codebook, and the ``(bm, N)`` f32
+LIF membrane (resident across the whole T axis).  At the defaults
+(bm=128, bk=256, bn=128) a single-macro layer (NC=N=128) costs
+
+    x        128*256      int8   =  32 KB   (x2 double buffered)
+    planes 2*256*128      int8   =  64 KB   (x2 double buffered)
+    mac      128*128      f32    =  64 KB
+    v + noise + outputs ~6*128*128 f32 ~ 384 KB
+
+~0.7 MB, and each additional column tile adds only 64 KB of accumulator +
+the same streamed 64 KB plane window — so a 256x512 layer (n_j=4) stays
+near 1 MB, far under the ~16 MB VMEM budget.  The head's transient
+``(bm, NC, 2^code_bits)`` one-hot compare (4 MB at NC=512, 5-bit codes) is
+the real ceiling: NC beyond ~1-2k columns per kernel should split at the
+model layer.  Folding T into the grid adds *no* VMEM (one time step is
+resident at a time); it removes the per-step kernel launch + weight-plane
+re-staging that dominates short-step event-stream serving.
 
 When to prefer the fused step
 -----------------------------
@@ -38,15 +60,19 @@ Inference hot loops (the SNN scan body, event-stream serving): everything the
 composed path writes to HBM between stages is dead weight there.  Prefer the
 composed path when you need the intermediates themselves (calibration sweeps,
 the Fig. 6/7 codebook studies) or gradients (training uses the STE jnp path,
-not these kernels).  ``kernels/ref.py::fused_macro_step_ref`` is the oracle:
-bitwise-identical at f32 accumulation because every MAC partial is a small
-integer (exactly representable, associativity-free) and the head is
-compare/select/LUT arithmetic mirrored operation-for-operation.
+not these kernels).  ``kernels/ref.py::fused_macro_step_ref`` (one step) and
+``fused_macro_seq_ref`` (time-major) are the oracles: bitwise-identical at
+f32 accumulation because every MAC partial is a small integer (exactly
+representable, associativity-free — so row/col tiling cannot change the sum)
+and the head is compare/select/LUT arithmetic mirrored
+operation-for-operation.
 """
 
 from __future__ import annotations
 
 import functools
+import math
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -54,23 +80,109 @@ from jax.experimental import pallas as pl
 
 DEFAULT_BM = 128
 DEFAULT_BK = 256  # the macro's row count: one K-tile == one physical macro
+DEFAULT_BN = 128  # the macro's column count: one col-tile == one macro width
 
 _LIF_STATICS = ("beta", "v_th1", "v_th2", "v_reset", "v_lim")
 
 
-def _accumulate_mac(x_ref, msb_ref, lsb_ref, mac_ref, *, ratio: float):
-    """Twin-cell decode + MXU MAC into the VMEM accumulator block."""
-    kk = pl.program_id(1)
+# ---------------------------------------------------------------------------
+# Tile planning
+# ---------------------------------------------------------------------------
+
+class TilePlan(NamedTuple):
+    """Padded geometry + grid for one fused kernel launch.
+
+    n_pad/nc_pad are the padded per-neuron / per-column widths (nc_pad ==
+    n_branches * n_pad, branch-major).  ``n_valid`` is the number of real
+    columns the KWN sweep may admit (padded columns are excluded from the
+    ramp inside the kernel).  ``vmem_resident_bytes`` counts the blocks live
+    in VMEM per grid step (x + double-buffered weight planes + accumulator +
+    LIF state + per-step outputs), not the head's transient one-hots.
+    """
+
+    bm: int
+    bk: int
+    bn: int
+    m_pad: int
+    k_pad: int
+    n_pad: int
+    nc_pad: int
+    n_valid: int
+    grid: tuple[int, int, int, int]   # (M/bm, T, NC/bn, K/bk)
+
+    @property
+    def vmem_resident_bytes(self) -> int:
+        streamed = self.bm * self.bk + 2 * self.bk * self.bn     # int8, x2 buf
+        resident = 4 * (self.bm * self.nc_pad                     # mac f32
+                        + 5 * self.bm * self.n_pad)               # v/noise/out
+        return 2 * streamed + resident
+
+
+def _ceil_mult(n: int, m: int) -> int:
+    return max(m, ((n + m - 1) // m) * m)
+
+
+def plan_tiles(m: int, k_dim: int, nc: int, n: int, t: int = 1, *,
+               mode: str = "kwn", n_branches: int = 1,
+               bm: int | None = None, bk: int | None = None,
+               bn: int | None = None) -> TilePlan:
+    """Pick (bm, bk, bn) and padded shapes for a fused launch.
+
+    Column tiling rules: a layer that fits one macro width (nc <= bn) runs a
+    single unpadded column tile; wider layers tile at ``bn`` (default 128,
+    the physical macro column count) with zero-padded tail columns.  In
+    ``nld`` mode padding must not straddle the branch-major column layout,
+    so the per-branch width n is padded to the smallest n_pad with
+    ``n_branches * n_pad % bn == 0`` and the planes are re-packed per branch.
+    Zero weight columns are MAC-neutral; the KWN sweep additionally masks
+    padded columns out of the ramp (``n_valid``) so they can never steal
+    winner slots.
+    """
+    bm_ = bm or min(DEFAULT_BM, _ceil_mult(m, 8))
+    bk_ = bk or DEFAULT_BK
+    bn_req = bn or DEFAULT_BN
+    if nc <= bn_req:
+        bn_ = nc
+        n_pad, nc_pad = n, nc
+    elif mode == "nld" and n_branches > 1:
+        bn_ = bn_req
+        step = bn_ // math.gcd(bn_, n_branches)
+        n_pad = _ceil_mult(n, step)
+        nc_pad = n_branches * n_pad
+    else:
+        bn_ = bn_req
+        nc_pad = _ceil_mult(nc, bn_)
+        n_pad = nc_pad
+    m_pad = _ceil_mult(m, bm_)
+    k_pad = _ceil_mult(k_dim, bk_)
+    return TilePlan(bm=bm_, bk=bk_, bn=bn_, m_pad=m_pad, k_pad=k_pad,
+                    n_pad=n_pad, nc_pad=nc_pad, n_valid=nc,
+                    grid=(m_pad // bm_, t, nc_pad // bn_, k_pad // bk_))
+
+
+# ---------------------------------------------------------------------------
+# Kernel bodies
+# ---------------------------------------------------------------------------
+
+def _accumulate_mac_tile(x_ref, msb_ref, lsb_ref, mac_ref, *, ratio: float,
+                         bn: int):
+    """Twin-cell decode + MXU MAC into this column tile's accumulator slice."""
+    j, kk = pl.program_id(2), pl.program_id(3)
+    x = x_ref[0].astype(jnp.float32)
+    w = ratio * msb_ref[...].astype(jnp.float32) \
+        + lsb_ref[...].astype(jnp.float32)
+    part = jax.lax.dot_general(
+        x, w, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)[None]
+    col = (pl.dslice(0, 1), pl.dslice(None), pl.dslice(j * bn, bn))
 
     @pl.when(kk == 0)
     def _init():
-        mac_ref[...] = jnp.zeros_like(mac_ref)
+        pl.store(mac_ref, col, jnp.zeros_like(part) + part)
 
-    x = x_ref[...].astype(jnp.float32)
-    w = ratio * msb_ref[...].astype(jnp.float32) \
-        + lsb_ref[...].astype(jnp.float32)
-    mac_ref[...] += jax.lax.dot_general(
-        x, w, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    @pl.when(kk > 0)
+    def _accumulate():
+        pl.store(mac_ref, col, pl.load(mac_ref, col) + part)
 
 
 def _ramp_codes(x: jax.Array, bounds: jax.Array) -> jax.Array:
@@ -122,40 +234,61 @@ def _lif_update(v, drive, mask, noise, *, beta, v_th1, v_th2, v_reset, v_lim,
     return jnp.where(spike > 0, v_reset, v_new), spike
 
 
-def _fused_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
-                      scale_ref, v_ref, noise_ref,
-                      mac_ref, v_out_ref, spike_ref, mask_ref, steps_ref, *,
-                      ratio, n_k, k, n_codes, beta, v_th1, v_th2, v_reset,
-                      v_lim, use_snl, drive_gain):
-    _accumulate_mac(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio)
+def _mask_padded_columns(codes: jax.Array, n_valid: int) -> jax.Array:
+    """Padded columns never cross the ramp (code -1 < every sweep level)."""
+    if n_valid >= codes.shape[-1]:
+        return codes
+    col = jax.lax.broadcasted_iota(jnp.int32, codes.shape, 1)
+    return jnp.where(col < n_valid, codes, -1)
 
-    @pl.when(pl.program_id(1) == n_k - 1)
+
+def _seq_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
+                    scale_ref, v0_ref, noise_ref,
+                    mac_ref, v_ref, spike_ref, mask_ref, steps_ref, *,
+                    ratio, bn, n_j, n_k, n_valid, k, n_codes, beta, v_th1,
+                    v_th2, v_reset, v_lim, use_snl, drive_gain):
+    t, j, kk = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+
+    @pl.when((t == 0) & (j == 0) & (kk == 0))
+    def _load_membrane():
+        v_ref[...] = v0_ref[...]
+
+    _accumulate_mac_tile(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio, bn=bn)
+
+    @pl.when((j == n_j - 1) & (kk == n_k - 1))
     def _head():
-        mac = mac_ref[...]                                # (bm, N) int-valued
-        codes = _ramp_codes(mac, bounds_ref[...][0])
+        mac = mac_ref[0]                                  # (bm, N) int-valued
+        codes = _mask_padded_columns(_ramp_codes(mac, bounds_ref[...][0]),
+                                     n_valid)
         maskf, steps = _kwn_sweep(codes, k, n_codes)
         recon = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
         # Winner drive: LUT value x per-column weight scale, losers exactly 0.
         drive = recon * scale_ref[...] * maskf * drive_gain
         v_new, spike = _lif_update(
-            v_ref[...], drive, maskf, noise_ref[...], beta=beta, v_th1=v_th1,
+            v_ref[...], drive, maskf, noise_ref[0], beta=beta, v_th1=v_th1,
             v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
-        v_out_ref[...] = v_new
-        spike_ref[...] = spike
-        mask_ref[...] = maskf
-        steps_ref[...] = steps
+        v_ref[...] = v_new
+        spike_ref[0] = spike
+        mask_ref[0] = maskf
+        steps_ref[0] = steps
 
 
-def _fused_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
-                      scale_ref, w_dend_ref, v_ref, noise_ref,
-                      mac_ref, v_out_ref, spike_ref, mask_ref, steps_ref, *,
-                      ratio, n_k, n_codes, n_branches, beta, v_th1, v_th2,
-                      v_reset, v_lim, drive_gain):
-    _accumulate_mac(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio)
+def _seq_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
+                    scale_ref, w_dend_ref, v0_ref, noise_ref,
+                    mac_ref, v_ref, spike_ref, mask_ref, steps_ref, *,
+                    ratio, bn, n_j, n_k, n_codes, n_branches, beta, v_th1,
+                    v_th2, v_reset, v_lim, drive_gain):
+    t, j, kk = pl.program_id(1), pl.program_id(2), pl.program_id(3)
 
-    @pl.when(pl.program_id(1) == n_k - 1)
+    @pl.when((t == 0) & (j == 0) & (kk == 0))
+    def _load_membrane():
+        v_ref[...] = v0_ref[...]
+
+    _accumulate_mac_tile(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio, bn=bn)
+
+    @pl.when((j == n_j - 1) & (kk == n_k - 1))
     def _head():
-        mac = mac_ref[...] * scale_ref[...]               # (bm, J*N) float
+        mac = mac_ref[0] * scale_ref[...]                 # (bm, J*N) float
         codes = _ramp_codes(mac, bounds_ref[...][0])
         act = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
         bm = act.shape[0]
@@ -165,30 +298,35 @@ def _fused_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
         drive = jnp.sum(act3 * w_dend[None, :, :], axis=1) * drive_gain
         ones = jnp.ones((bm, n), jnp.float32)             # dense LIF update
         v_new, spike = _lif_update(
-            v_ref[...], drive, ones, noise_ref[...], beta=beta, v_th1=v_th1,
+            v_ref[...], drive, ones, noise_ref[0], beta=beta, v_th1=v_th1,
             v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=False)
-        v_out_ref[...] = v_new
-        spike_ref[...] = spike
-        mask_ref[...] = ones
-        steps_ref[...] = jnp.full((bm, 1), n_codes - 1, jnp.int32)
+        v_ref[...] = v_new
+        spike_ref[0] = spike
+        mask_ref[0] = ones
+        steps_ref[0] = jnp.full((bm, 1), n_codes - 1, jnp.int32)
 
+
+# ---------------------------------------------------------------------------
+# Public entry points
+# ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnames=(
-    "mode", "k", "ratio", "drive_gain", "use_snl", "bm", "bk",
-    "interpret") + _LIF_STATICS)
-def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
-                     boundaries: jax.Array, levels: jax.Array,
-                     scale: jax.Array, v: jax.Array, noise: jax.Array,
-                     w_dend: jax.Array | None = None, *,
-                     mode: str = "kwn", k: int = 12, ratio: float = 2.0,
-                     drive_gain: float = 1.0, beta: float = 0.9,
-                     v_th1: float = 1.0, v_th2: float = 0.6,
-                     v_reset: float = 0.0, v_lim: float = 8.0,
-                     use_snl: bool = True, bm: int = DEFAULT_BM,
-                     bk: int = DEFAULT_BK, interpret: bool = True):
-    """One fused macro time step.
+    "mode", "k", "ratio", "drive_gain", "use_snl", "bm", "bk", "bn",
+    "n_valid", "interpret") + _LIF_STATICS)
+def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
+                    boundaries: jax.Array, levels: jax.Array,
+                    scale: jax.Array, v: jax.Array, noise: jax.Array,
+                    w_dend: jax.Array | None = None, *,
+                    mode: str = "kwn", k: int = 12, ratio: float = 2.0,
+                    drive_gain: float = 1.0, beta: float = 0.9,
+                    v_th1: float = 1.0, v_th2: float = 0.6,
+                    v_reset: float = 0.0, v_lim: float = 8.0,
+                    use_snl: bool = True, bm: int = DEFAULT_BM,
+                    bk: int = DEFAULT_BK, bn: int | None = None,
+                    n_valid: int | None = None, interpret: bool = True):
+    """A whole fused event sequence: T macro time steps in one kernel.
 
-    x:           (M, K) int8 ternary inputs (encoded event spikes).
+    x:           (T, M, K) int8 ternary inputs (time-major encoded events).
     msb/lsb:     (K, NC) int8 twin-cell planes.  ``kwn``: NC == N columns;
                  ``nld``: NC == J*N with branch-major column packing
                  (column j*N + p is branch j of output neuron p).
@@ -199,31 +337,42 @@ def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                  winner drive after conversion in ``kwn`` mode (the ramp sees
                  integer-unit MACs); applied to the MAC before conversion in
                  ``nld`` mode (the activation ramp sees float-unit MACs).
-    v, noise:    (M, N) f32 membrane state and pre-drawn PRBS noise.
+    v:           (M, N) f32 initial membrane state (carried across T in
+                 VMEM).
+    noise:       (T, M, N) f32 pre-drawn per-step PRBS noise.
     w_dend:      (J, N) soma combine weights (``nld`` only).
+    bn:          column tile width (None = full NC width, single tile).
+    n_valid:     number of real (non-padded) columns for the KWN sweep.
 
-    Returns (mac (M, NC) f32, v_out (M, N) f32, spikes (M, N) f32,
-    mask (M, N) f32, adc_steps (M, 1) i32).
+    Returns (mac (T, M, NC) f32, v_out (M, N) f32, spikes (T, M, N) f32,
+    mask (T, M, N) f32, adc_steps (T, M, 1) i32).
     """
-    m, kdim = x.shape
+    t_steps, m, kdim = x.shape
     kdim2, nc = msb.shape
     n = v.shape[-1]
+    bn = nc if bn is None else bn
+    n_valid = nc if n_valid is None else n_valid
     assert kdim == kdim2 and msb.shape == lsb.shape
-    assert m % bm == 0 and kdim % bk == 0, (m, kdim, bm, bk)
-    assert v.shape == noise.shape == (m, n)
+    assert m % bm == 0 and kdim % bk == 0 and nc % bn == 0, \
+        (m, kdim, nc, bm, bk, bn)
+    assert v.shape == (m, n) and noise.shape == (t_steps, m, n)
     n_codes = levels.shape[0]
     assert boundaries.shape[0] == n_codes - 1
-    grid = (m // bm, kdim // bk)
+    grid = (m // bm, t_steps, nc // bn, kdim // bk)
+    n_j, n_k = grid[2], grid[3]
 
-    row_spec = lambda shape: pl.BlockSpec(shape, lambda i, kk: (i, 0))
-    const_spec = lambda shape: pl.BlockSpec(shape, lambda i, kk: (0, 0))
+    row_spec = lambda shape: pl.BlockSpec(shape, lambda i, t, j, kk: (i, 0))
+    step_spec = lambda shape: pl.BlockSpec(shape,
+                                           lambda i, t, j, kk: (t, i, 0))
+    const_spec = lambda shape: pl.BlockSpec(shape,
+                                            lambda i, t, j, kk: (0, 0))
     in_specs = [
-        pl.BlockSpec((bm, bk), lambda i, kk: (i, kk)),       # x
-        pl.BlockSpec((bk, nc), lambda i, kk: (kk, 0)),       # msb
-        pl.BlockSpec((bk, nc), lambda i, kk: (kk, 0)),       # lsb
-        const_spec((1, n_codes - 1)),                        # boundaries
-        const_spec((1, n_codes)),                            # levels
-        const_spec((1, nc)),                                 # scale
+        pl.BlockSpec((1, bm, bk), lambda i, t, j, kk: (t, i, kk)),   # x
+        pl.BlockSpec((bk, bn), lambda i, t, j, kk: (kk, j)),         # msb
+        pl.BlockSpec((bk, bn), lambda i, t, j, kk: (kk, j)),         # lsb
+        const_spec((1, n_codes - 1)),                                # bounds
+        const_spec((1, n_codes)),                                    # levels
+        const_spec((1, nc)),                                         # scale
     ]
     inputs = [x.astype(jnp.int8), msb.astype(jnp.int8), lsb.astype(jnp.int8),
               boundaries.astype(jnp.float32).reshape(1, -1),
@@ -233,23 +382,25 @@ def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
     if mode == "kwn":
         assert nc == n, (nc, n)
         kernel = functools.partial(
-            _fused_kwn_kernel, ratio=ratio, n_k=grid[1], k=k, n_codes=n_codes,
-            beta=beta, v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-            use_snl=use_snl, drive_gain=drive_gain)
+            _seq_kwn_kernel, ratio=ratio, bn=bn, n_j=n_j, n_k=n_k,
+            n_valid=n_valid, k=k, n_codes=n_codes, beta=beta, v_th1=v_th1,
+            v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl,
+            drive_gain=drive_gain)
     elif mode == "nld":
         assert w_dend is not None and nc % n == 0, (nc, n)
         n_branches = nc // n
         assert w_dend.shape == (n_branches, n)
-        in_specs.append(const_spec((n_branches, n)))         # w_dend
+        in_specs.append(const_spec((n_branches, n)))                 # w_dend
         inputs.append(w_dend.astype(jnp.float32))
         kernel = functools.partial(
-            _fused_nld_kernel, ratio=ratio, n_k=grid[1], n_codes=n_codes,
-            n_branches=n_branches, beta=beta, v_th1=v_th1, v_th2=v_th2,
-            v_reset=v_reset, v_lim=v_lim, drive_gain=drive_gain)
+            _seq_nld_kernel, ratio=ratio, bn=bn, n_j=n_j, n_k=n_k,
+            n_codes=n_codes, n_branches=n_branches, beta=beta, v_th1=v_th1,
+            v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+            drive_gain=drive_gain)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 
-    in_specs += [row_spec((bm, n)), row_spec((bm, n))]       # v, noise
+    in_specs += [row_spec((bm, n)), step_spec((1, bm, n))]   # v0, noise
     inputs += [v.astype(jnp.float32), noise.astype(jnp.float32)]
 
     return pl.pallas_call(
@@ -257,16 +408,42 @@ def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
         grid=grid,
         in_specs=in_specs,
         out_specs=[
-            row_spec((bm, nc)),                              # mac telemetry
-            row_spec((bm, n)), row_spec((bm, n)), row_spec((bm, n)),
-            row_spec((bm, 1)),
+            step_spec((1, bm, nc)),                          # mac telemetry
+            row_spec((bm, n)),                               # carried V_mem
+            step_spec((1, bm, n)), step_spec((1, bm, n)),
+            step_spec((1, bm, 1)),
         ],
         out_shape=[
-            jax.ShapeDtypeStruct((m, nc), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps, m, nc), jnp.float32),
             jax.ShapeDtypeStruct((m, n), jnp.float32),
-            jax.ShapeDtypeStruct((m, n), jnp.float32),
-            jax.ShapeDtypeStruct((m, n), jnp.float32),
-            jax.ShapeDtypeStruct((m, 1), jnp.int32),
+            jax.ShapeDtypeStruct((t_steps, m, n), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps, m, n), jnp.float32),
+            jax.ShapeDtypeStruct((t_steps, m, 1), jnp.int32),
         ],
         interpret=interpret,
     )(*inputs)
+
+
+def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
+                     boundaries: jax.Array, levels: jax.Array,
+                     scale: jax.Array, v: jax.Array, noise: jax.Array,
+                     w_dend: jax.Array | None = None, *,
+                     mode: str = "kwn", k: int = 12, ratio: float = 2.0,
+                     drive_gain: float = 1.0, beta: float = 0.9,
+                     v_th1: float = 1.0, v_th2: float = 0.6,
+                     v_reset: float = 0.0, v_lim: float = 8.0,
+                     use_snl: bool = True, bm: int = DEFAULT_BM,
+                     bk: int = DEFAULT_BK, bn: int | None = None,
+                     n_valid: int | None = None, interpret: bool = True):
+    """One fused macro time step: the T=1 degenerate of ``fused_macro_seq``.
+
+    x (M, K), v/noise (M, N); returns (mac (M, NC), v_out, spikes, mask,
+    adc_steps (M, 1)) exactly like the PR 1 single-step kernel.
+    """
+    mac, v_out, spikes, mask, steps = fused_macro_seq(
+        x[None], msb, lsb, boundaries, levels, scale, v, noise[None], w_dend,
+        mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
+        v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+        use_snl=use_snl, bm=bm, bk=bk, bn=bn, n_valid=n_valid,
+        interpret=interpret)
+    return mac[0], v_out, spikes[0], mask[0], steps[0]

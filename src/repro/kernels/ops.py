@@ -84,42 +84,101 @@ def lif_step(v, drive, mask, noise, **params):
     return v_out[:m0].reshape(*lead, n), spikes[:m0].reshape(*lead, n)
 
 
+def _pad_cols(a, n: int, n_pad: int, n_branches: int):
+    """Zero-pad the branch-major column axis (last) from J*n to J*n_pad."""
+    if n_pad == n:
+        return a
+    lead = a.shape[:-1]
+    branched = a.reshape(*lead, n_branches, n)
+    widths = [(0, 0)] * (branched.ndim - 1) + [(0, n_pad - n)]
+    return jnp.pad(branched, widths).reshape(*lead, n_branches * n_pad)
+
+
+def _unpad_cols(a, n: int, n_pad: int, n_branches: int):
+    """Inverse of ``_pad_cols`` for branch-major column outputs."""
+    if n_pad == n:
+        return a
+    lead = a.shape[:-1]
+    branched = a.reshape(*lead, n_branches, n_pad)
+    return branched[..., :n].reshape(*lead, n_branches * n)
+
+
+def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise,
+                    w_dend=None, *, mode: str = "kwn", k: int = 12,
+                    ratio: float = 2.0, drive_gain: float = 1.0,
+                    beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
+                    v_reset: float = 0.0, v_lim: float = 8.0,
+                    use_snl: bool = True, bm: int | None = None,
+                    bk: int | None = None, bn: int | None = None):
+    """Batched time-major fused sequence; x (T, ..., K), v (..., N),
+    noise (T, ..., N).
+
+    Pads the batch to the row tile, K to the macro row count, and — for
+    layers wider than one macro — the column axis to the column tile (zero
+    padding is MAC-neutral; padded columns are masked out of the KWN ramp
+    and, in NLD mode, padded per branch so the branch-major layout
+    survives).  Runs the whole sequence through one kernel launch with the
+    LIF membrane carried in VMEM, then slices the padding back off.
+
+    Returns (mac (T, ..., NC), v_out (..., N), spikes (T, ..., N),
+    mask (T, ..., N), adc_steps (T, ...)).
+    """
+    t = x.shape[0]
+    lead = x.shape[1:-1]
+    kdim = x.shape[-1]
+    n = v.shape[-1]
+    nc = msb.shape[-1]
+    n_branches = nc // n if mode == "nld" else 1
+    xm = x.reshape(t, -1, kdim)
+    vm = v.reshape(-1, n)
+    nm = noise.reshape(t, -1, n)
+    m0 = xm.shape[1]
+    plan = _fused.plan_tiles(m0, kdim, nc, n, t, mode=mode,
+                             n_branches=n_branches, bm=bm, bk=bk, bn=bn)
+    xm = jnp.pad(xm, ((0, 0), (0, plan.m_pad - m0), (0, plan.k_pad - kdim)))
+    vm = jnp.pad(vm, ((0, plan.m_pad - m0), (0, plan.n_pad - n)))
+    nm = jnp.pad(nm, ((0, 0), (0, plan.m_pad - m0), (0, plan.n_pad - n)))
+    msb_p = _pad_cols(jnp.pad(msb, ((0, plan.k_pad - kdim), (0, 0))),
+                      n, plan.n_pad, n_branches)
+    lsb_p = _pad_cols(jnp.pad(lsb, ((0, plan.k_pad - kdim), (0, 0))),
+                      n, plan.n_pad, n_branches)
+    scale_p = _pad_cols(scale.reshape(-1), n, plan.n_pad, n_branches)
+    w_dend_p = w_dend
+    if w_dend is not None and plan.n_pad != n:
+        w_dend_p = jnp.pad(w_dend, ((0, 0), (0, plan.n_pad - n)))
+    mac, v_out, spikes, mask, steps = _fused.fused_macro_seq(
+        xm, msb_p, lsb_p, boundaries, levels, scale_p, vm, nm, w_dend_p,
+        mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
+        v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+        use_snl=use_snl, bm=plan.bm, bk=plan.bk, bn=plan.bn,
+        n_valid=plan.n_valid, interpret=INTERPRET)
+    mac = _unpad_cols(mac[:, :m0], n, plan.n_pad, n_branches)
+    return (mac.reshape(t, *lead, nc),
+            v_out[:m0, :n].reshape(*lead, n),
+            spikes[:, :m0, :n].reshape(t, *lead, n),
+            mask[:, :m0, :n].reshape(t, *lead, n),
+            steps[:, :m0, 0].reshape(t, *lead))
+
+
 def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise,
                      w_dend=None, *, mode: str = "kwn", k: int = 12,
                      ratio: float = 2.0, drive_gain: float = 1.0,
                      beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
                      v_reset: float = 0.0, v_lim: float = 8.0,
                      use_snl: bool = True, bm: int | None = None,
-                     bk: int | None = None):
+                     bk: int | None = None, bn: int | None = None):
     """Batched fused macro step; x (..., K), v/noise (..., N).
 
-    Pads the batch to the row tile and K to the macro row count (zero
-    padding is MAC-neutral), runs the fused kernel, and slices the padding
-    back off.  Returns (mac (..., NC), v_out, spikes, mask (..., N),
+    The T=1 degenerate of ``fused_macro_seq`` (one kernel launch per time
+    step).  Returns (mac (..., NC), v_out, spikes, mask (..., N),
     adc_steps (...,)).
     """
-    lead = x.shape[:-1]
-    n = v.shape[-1]
-    nc = msb.shape[-1]
-    xm = x.reshape(-1, x.shape[-1])
-    vm = v.reshape(-1, n)
-    nm = noise.reshape(-1, n)
-    bm_ = bm or min(_fused.DEFAULT_BM, _ceil_mult(xm.shape[0], 8))
-    bk_ = bk or _fused.DEFAULT_BK
-    xm, m0 = _pad_to(xm, 0, bm_)
-    xm, _ = _pad_to(xm, 1, bk_)
-    msb_p, _ = _pad_to(msb, 0, bk_)
-    lsb_p, _ = _pad_to(lsb, 0, bk_)
-    vm, _ = _pad_to(vm, 0, bm_)
-    nm, _ = _pad_to(nm, 0, bm_)
-    mac, v_out, spikes, mask, steps = _fused.fused_macro_step(
-        xm, msb_p, lsb_p, boundaries, levels, scale, vm, nm, w_dend,
+    mac, v_out, spikes, mask, steps = fused_macro_seq(
+        x[None], msb, lsb, boundaries, levels, scale, v, noise[None], w_dend,
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-        use_snl=use_snl, bm=bm_, bk=bk_, interpret=INTERPRET)
-    return (mac[:m0].reshape(*lead, nc), v_out[:m0].reshape(*lead, n),
-            spikes[:m0].reshape(*lead, n), mask[:m0].reshape(*lead, n),
-            steps[:m0, 0].reshape(lead))
+        use_snl=use_snl, bm=bm, bk=bk, bn=bn)
+    return mac[0], v_out, spikes[0], mask[0], steps[0]
 
 
 def nlq_convert(x, boundaries, levels):

@@ -49,23 +49,15 @@ def nlq_convert_ref(x, boundaries, levels):
     return code, jnp.take(levels, code)
 
 
-def fused_macro_step_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
-                         w_dend=None, *, mode: str = "kwn", k: int = 12,
-                         ratio: float = 2.0, drive_gain: float = 1.0,
-                         beta: float = 0.9, v_th1: float = 1.0,
-                         v_th2: float = 0.6, v_reset: float = 0.0,
-                         v_lim: float = 8.0, use_snl: bool = True):
-    """Composed jnp oracle for the fused macro step (kernels/fused_macro.py).
-
-    Same stage sequence — twin-cell MAC, IMA ramp conversion, mode head
-    (KWN descending-ramp top-K / NLD branch activation + soma combine),
-    LIF update — expressed through the core-library semantics, with every
-    arithmetic step mirrored so the fused kernel matches *bitwise* at f32:
-    the MAC partials are small integers (exact in f32, associativity-free)
-    and the head is compare/select/LUT arithmetic.
-
-    Returns (mac, v_out, spikes, mask, adc_steps) like the kernel, with
-    adc_steps shaped (..., 1).
+def fused_head_ref(mac, boundaries, levels, scale, v, noise,
+                   w_dend=None, *, mode: str = "kwn", k: int = 12,
+                   drive_gain: float = 1.0, beta: float = 0.9,
+                   v_th1: float = 1.0, v_th2: float = 0.6,
+                   v_reset: float = 0.0, v_lim: float = 8.0,
+                   use_snl: bool = True):
+    """The post-MAC stages of the fused step: IMA ramp conversion, mode head
+    (KWN descending-ramp top-K / NLD branch activation + soma combine), and
+    the LIF update.  Split out so tiled MAC oracles can reuse it verbatim.
     """
     # in_lo/in_hi are only consumed by the noise model, not by
     # convert/reconstruct/select — keep the oracle jit-friendly.
@@ -73,7 +65,6 @@ def fused_macro_step_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
         levels=jnp.asarray(levels, jnp.float32),
         boundaries=jnp.asarray(boundaries, jnp.float32),
         in_lo=0.0, in_hi=0.0)
-    mac = ternary_mac_ref(x, msb, lsb, ratio=ratio)
     if mode == "kwn":
         codes = ima_lib.ima_convert(mac, cb)
         res = kwn_lib.kwn_select(mac, k, cb)
@@ -94,4 +85,101 @@ def fused_macro_step_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
     v_out, spikes = lif_step_ref(v, drive, mask, noise, beta=beta,
                                  v_th1=v_th1, v_th2=v_th2, v_reset=v_reset,
                                  v_lim=v_lim, use_snl=use_snl)
+    return v_out, spikes, mask, steps
+
+
+def fused_macro_step_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
+                         w_dend=None, *, mode: str = "kwn", k: int = 12,
+                         ratio: float = 2.0, drive_gain: float = 1.0,
+                         beta: float = 0.9, v_th1: float = 1.0,
+                         v_th2: float = 0.6, v_reset: float = 0.0,
+                         v_lim: float = 8.0, use_snl: bool = True):
+    """Composed jnp oracle for the fused macro step (kernels/fused_macro.py).
+
+    Same stage sequence — twin-cell MAC, IMA ramp conversion, mode head
+    (KWN descending-ramp top-K / NLD branch activation + soma combine),
+    LIF update — expressed through the core-library semantics, with every
+    arithmetic step mirrored so the fused kernel matches *bitwise* at f32:
+    the MAC partials are small integers (exact in f32, associativity-free)
+    and the head is compare/select/LUT arithmetic.
+
+    Returns (mac, v_out, spikes, mask, adc_steps) like the kernel, with
+    adc_steps shaped (..., 1).
+    """
+    mac = ternary_mac_ref(x, msb, lsb, ratio=ratio)
+    v_out, spikes, mask, steps = fused_head_ref(
+        mac, boundaries, levels, scale, v, noise, w_dend, mode=mode, k=k,
+        drive_gain=drive_gain, beta=beta, v_th1=v_th1, v_th2=v_th2,
+        v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
     return mac, v_out, spikes, mask, steps
+
+
+def tiled_ternary_mac_ref(x, msb, lsb, ratio: float = 2.0, *,
+                          bk: int = 256, bn: int = 128) -> jax.Array:
+    """Tiled-oracle MAC: explicit digital partial-sum accumulation.
+
+    Computes the twin-cell GEMM the way the tiled kernel does — one
+    ``(bk, bn)`` weight-plane tile per step, f32 partial sums added across
+    the K tiles in order — to pin down that row/col tiling cannot move the
+    result: every partial is a small exact integer, so f32 accumulation is
+    associativity-free and any tiling equals the untiled ``ternary_mac_ref``
+    bitwise.
+    """
+    kdim, nc = msb.shape
+    w = ratio * msb.astype(jnp.float32) + lsb.astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    cols = []
+    for j0 in range(0, nc, bn):
+        acc = None
+        for k0 in range(0, kdim, bk):
+            part = xf[..., k0:k0 + bk] @ w[k0:k0 + bk, j0:j0 + bn]
+            acc = part if acc is None else acc + part
+        cols.append(acc)
+    return jnp.concatenate(cols, axis=-1)
+
+
+def fused_macro_tiled_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
+                          w_dend=None, *, bk: int = 256, bn: int = 128,
+                          mode: str = "kwn", k: int = 12, ratio: float = 2.0,
+                          drive_gain: float = 1.0, beta: float = 0.9,
+                          v_th1: float = 1.0, v_th2: float = 0.6,
+                          v_reset: float = 0.0, v_lim: float = 8.0,
+                          use_snl: bool = True):
+    """Tiled oracle: ``tiled_ternary_mac_ref`` + the shared fused head.
+
+    Must equal ``fused_macro_step_ref`` bitwise for any (bk, bn) — the
+    property suite sweeps tilings against it.
+    """
+    mac = tiled_ternary_mac_ref(x, msb, lsb, ratio=ratio, bk=bk, bn=bn)
+    v_out, spikes, mask, steps = fused_head_ref(
+        mac, boundaries, levels, scale, v, noise, w_dend, mode=mode, k=k,
+        drive_gain=drive_gain, beta=beta, v_th1=v_th1, v_th2=v_th2,
+        v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
+    return mac, v_out, spikes, mask, steps
+
+
+def fused_macro_seq_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
+                        w_dend=None, *, mode: str = "kwn", k: int = 12,
+                        ratio: float = 2.0, drive_gain: float = 1.0,
+                        beta: float = 0.9, v_th1: float = 1.0,
+                        v_th2: float = 0.6, v_reset: float = 0.0,
+                        v_lim: float = 8.0, use_snl: bool = True):
+    """Time-major oracle: left-fold of ``fused_macro_step_ref`` over T.
+
+    x (T, ..., K) time-major, v (..., N) initial membrane, noise
+    (T, ..., N) pre-drawn per-step noise.  Returns per-step stacks
+    (mac (T, ..., NC), spikes, mask, adc_steps (T, ..., 1)) plus the final
+    membrane (..., N) — exactly the contract of the time-major kernel.
+    """
+    def step(v_carry, inp):
+        xt, nt = inp
+        mac, v_out, spikes, mask, steps = fused_macro_step_ref(
+            xt, msb, lsb, boundaries, levels, scale, v_carry, nt, w_dend,
+            mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
+            v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+            use_snl=use_snl)
+        return v_out, (mac, spikes, mask, steps)
+
+    v_fin, (mac_t, spk_t, mask_t, steps_t) = jax.lax.scan(
+        step, v, (x, noise))
+    return mac_t, v_fin, spk_t, mask_t, steps_t

@@ -129,17 +129,26 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
                     mode: str | None = None, k: int | None = None,
                     use_snl: bool | None = None,
                     noise: ima_lib.IMANoiseModel | None = None,
-                    fused: bool = False):
+                    fused: bool | str = False):
     """Inference through the macro simulator (KWN Eq. 1 / NLD Eq. 2).
 
-    ``fused=True`` runs each scan-body time step through the single fused
-    Pallas kernel (MAC -> IMA -> mode head -> LIF in one VMEM pass,
-    ``repro.kernels.fused_macro``) instead of the composed stage chain.  In
-    KWN mode the fused step is bitwise-equal to the composed path at f32;
-    in NLD mode it additionally quantizes the branch weights onto the
-    twin-cell grid (the silicon storage format), so accuracies can differ
-    slightly from the float-weight composed path.  The IMA noise model needs
-    per-step Gaussian draws, so ``noise`` forces the composed path.
+    ``fused`` selects the execution path:
+
+    * ``False`` — the composed stage chain (HBM-visible intermediates);
+    * ``True`` / ``"seq"`` — the time-major fused kernel: the *whole* event
+      sequence runs in one Pallas launch (MAC -> IMA -> mode head -> LIF in
+      one VMEM pass per step, LIF membrane carried in VMEM across T), with
+      any virtual-macro tiling the layer shape needs picked automatically
+      by the kernel-side tile planner;
+    * ``"step"`` — the PR 1 behaviour: one fused kernel launch per scan
+      step (kept for launch-overhead benchmarking).
+
+    All fused variants are bitwise-equal to the composed path at f32 in KWN
+    mode; in NLD mode they additionally quantize the branch weights onto
+    the twin-cell grid (the silicon storage format), so accuracies can
+    differ slightly from the float-weight composed path.  The IMA noise
+    model needs per-step Gaussian draws, so ``noise`` forces the composed
+    path.
 
     Returns (logits, telemetry) where telemetry carries adc_steps per time
     step (early-stop latency), LIF update counts, and SOP counts for the
@@ -148,7 +157,9 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
     mode = mode or cfg.mode
     k = k or cfg.k
     use_snl = cfg.use_snl if use_snl is None else use_snl
-    fused = fused and noise is None
+    if fused is True:
+        fused = "seq"
+    fused = fused if noise is None else False
     b = events.shape[0]
     mcfg = macro_lib.CIMMacroConfig(
         code_bits=cfg.code_bits,
@@ -156,9 +167,15 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
         ima_noise=noise)
     lif_p = lif_lib.LIFParams(beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
                               noise_amp=cfg.noise_amp if use_snl else 0.0)
-    if fused:
+    if fused == "seq":
+        return _forward_silicon_fused_seq(p, events, cfg, mode, k, use_snl,
+                                          mcfg, lif_p)
+    if fused == "step":
         return _forward_silicon_fused(p, events, cfg, mode, k, use_snl, mcfg,
                                       lif_p)
+    if fused is not False:
+        raise ValueError(f"unknown fused={fused!r}; expected False, True, "
+                         f"'step', or 'seq'")
     if mode == "kwn":
         w_int, scale = _quantized_weights(p, cfg)
         nlq = _nlq_cb(cfg)
@@ -208,20 +225,25 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
     return logits, tele
 
 
-def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
-                           use_snl: bool, mcfg, lif_p):
-    """Fused-kernel inference scan body (noise-free silicon path).
-
-    Mirrors the composed ``forward_silicon`` step exactly: same PRBS state
-    threading, same telemetry, one fused Pallas kernel per time step.
-    """
-    b = events.shape[0]
+def _pack_fused(p, cfg: SNNConfig, mode: str, mcfg):
     if mode == "kwn":
         w_int, scale = _quantized_weights(p, cfg)
-        fw = macro_lib.pack_kwn_weights(w_int, scale.reshape(-1), mcfg)
-    else:
-        fw = macro_lib.pack_nld_weights(p["dend"], mcfg,
-                                        activation=cfg.activation)
+        return macro_lib.pack_kwn_weights(w_int, scale.reshape(-1), mcfg)
+    return macro_lib.pack_nld_weights(p["dend"], mcfg,
+                                      activation=cfg.activation)
+
+
+def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
+                           use_snl: bool, mcfg, lif_p):
+    """Per-step fused inference scan body (noise-free silicon path).
+
+    Mirrors the composed ``forward_silicon`` step exactly: same PRBS state
+    threading, same telemetry, one fused Pallas kernel per time step.  Kept
+    for launch-overhead benchmarking; the serving default is the time-major
+    ``_forward_silicon_fused_seq``.
+    """
+    b = events.shape[0]
+    fw = _pack_fused(p, cfg, mode, mcfg)
     snl_active = use_snl and mode == "kwn"
 
     def step(carry, ev):
@@ -234,7 +256,7 @@ def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
         v, s, mask, steps, _ = macro_lib.fused_step(
             ev, fw, v, nz, k=k, drive_gain=cfg.drive_gain, beta=cfg.beta,
             v_th1=cfg.v_th1, v_th2=cfg.v_th2, v_reset=lif_p.v_reset,
-            v_lim=2.0 ** (lif_p.vmem_bits - 1) / 256.0,  # == _vmem_clip
+            v_lim=lif_lib.vmem_limit(lif_p.vmem_bits),
             use_snl=snl_active)
         n_upd = float(k if mode == "kwn" else cfg.n_hidden)
         tele = {
@@ -250,6 +272,59 @@ def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
     init = (st0.v_mem, st0.prbs_state, jnp.zeros((b, cfg.n_hidden)), tele0)
     (_, _, counts, tele), _ = jax.lax.scan(step, init,
                                            jnp.moveaxis(events, 1, 0))
+    logits = (counts / cfg.n_steps) @ p["w_out"]
+    tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)
+    return logits, tele
+
+
+def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
+                               use_snl: bool, mcfg, lif_p):
+    """Time-major fused inference: the whole event sequence in one launch.
+
+    The T axis is folded into the Pallas grid (``macro.fused_seq``), so the
+    LIF membrane never leaves VMEM between steps and the weight planes are
+    staged once per sequence instead of once per step — the serving
+    engine's dominant launch overhead.  PRBS noise is pre-drawn with the
+    exact LFSR sequence the per-step path threads through its scan, and the
+    per-step output stacks are left-folded in scan order, so logits and
+    telemetry stay bitwise-equal to the composed and per-step paths.
+    """
+    b, t_steps = events.shape[0], events.shape[1]
+    fw = _pack_fused(p, cfg, mode, mcfg)
+    snl_active = use_snl and mode == "kwn"
+    ev_t = jnp.moveaxis(events, 1, 0)                      # (T, B, N_in)
+    st0 = lif_lib.lif_init((b, cfg.n_hidden))
+    if snl_active:
+        def draw(s, _):
+            s, nz = prbs_lib.prbs_noise(s, (b, cfg.n_hidden), lif_p.noise_amp)
+            return s, nz
+        _, noise_t = jax.lax.scan(draw, st0.prbs_state, None, length=t_steps)
+    else:
+        noise_t = jnp.zeros((t_steps, b, cfg.n_hidden))
+    _, spk_t, _, steps_t, _ = macro_lib.fused_seq(
+        ev_t, fw, st0.v_mem, noise_t, k=k, drive_gain=cfg.drive_gain,
+        beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
+        v_reset=lif_p.v_reset,
+        v_lim=lif_lib.vmem_limit(lif_p.vmem_bits),
+        use_snl=snl_active)
+    n_upd = float(k if mode == "kwn" else cfg.n_hidden)
+    sops_t = jnp.sum(jnp.abs(ev_t), axis=-1) * cfg.n_hidden   # (T, B)
+
+    def fold(acc, xs):
+        counts, tele = acc
+        spk, steps, sops = xs
+        tele = {
+            "adc_steps": tele["adc_steps"] + steps.astype(jnp.float32),
+            "lif_updates": tele["lif_updates"] + n_upd,
+            "sops": tele["sops"] + sops,
+        }
+        return (counts + spk, tele), None
+
+    tele0 = {"adc_steps": jnp.zeros((b,)), "lif_updates": jnp.zeros((b,)),
+             "sops": jnp.zeros((b,))}
+    (counts, tele), _ = jax.lax.scan(
+        fold, (jnp.zeros((b, cfg.n_hidden)), tele0),
+        (spk_t, steps_t, sops_t))
     logits = (counts / cfg.n_steps) @ p["w_out"]
     tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)
     return logits, tele

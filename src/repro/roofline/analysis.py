@@ -210,9 +210,8 @@ def model_flops(n_active_params: int, n_tokens: int, kind: str,
 
 def from_compiled(compiled, lowered_text: str | None = None,
                   model_flops_per_device: float = 0.0) -> Roofline:
-    ca = compiled.cost_analysis()
-    if not isinstance(ca, dict):
-        ca = ca[0]
+    from repro import compat
+    ca = compat.cost_analysis_dict(compiled)
     hlo = lowered_text or compiled.as_text()
     coll = collective_bytes(hlo)
     return Roofline(

@@ -61,28 +61,35 @@ class EventRequest:
 
 
 class SNNEventEngine:
-    """Batched event-stream inference on the fused macro-step kernel.
+    """Batched event-stream inference on the fused macro kernel.
 
-    The hot loop is one jitted ``forward_silicon(fused=True)`` call per full
-    batch: the scan body runs the entire MAC -> IMA -> KWN/NLD -> LIF
-    pipeline inside a single Pallas kernel per time step, so serving cost per
-    request is one kernel launch per (time step, row tile) with no
-    HBM-visible intermediates.  Requests are padded to fixed ``batch_slots``
-    (dummy rows are all-zero event streams) so the jit cache holds exactly
-    one entry.
+    The hot loop is one jitted ``forward_silicon(fused=...)`` call per full
+    batch.  With ``time_major=True`` (default) the *entire* event sequence
+    of the batch runs in a single time-major Pallas launch: the T axis is
+    folded into the kernel grid, the LIF membrane stays in VMEM across
+    steps, and weight planes are staged once per sequence — serving cost
+    per request is one kernel launch per batch, with no HBM-visible
+    intermediates and no per-step launch overhead.  ``time_major=False``
+    keeps the PR 1 per-step launch cadence (one fused kernel per time
+    step), useful for measuring exactly that overhead.  Layers wider than
+    one 256x128 macro are tiled inside the kernel either way.  Requests are
+    padded to fixed ``batch_slots`` (dummy rows are all-zero event streams)
+    so the jit cache holds exactly one entry.
     """
 
     def __init__(self, cfg: snn_lib.SNNConfig, params, batch_slots: int = 64,
-                 seed: int = 0):
+                 seed: int = 0, time_major: bool = True):
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
+        self.time_major = time_major
         self.pending: list[EventRequest] = []
         self.completed: list[EventRequest] = []
         self._key = jax.random.PRNGKey(seed)
+        fused = "seq" if time_major else "step"
         self._fwd = jax.jit(
             lambda p, ev, key: snn_lib.forward_silicon(p, ev, cfg, key,
-                                                       fused=True))
+                                                       fused=fused))
 
     def submit(self, req: EventRequest):
         self.pending.append(req)

@@ -1,8 +1,11 @@
 """Shared test setup: deterministic seeding, JAX platform config, and the
-``slow`` marker for the long-running system/pipeline tiers.
+``slow``/``fast`` markers for the test tiers.
 
 Run with ``PYTHONPATH=src python -m pytest -x -q``; deselect the slow tier
-with ``-m "not slow"`` for a fast inner loop.
+with ``-m "not slow"`` for a faster inner loop, or run the <60 s tier-1
+smoke subset with ``-m "fast and not slow"`` (also ``make smoke``).  The
+fast tier is curated by module below — parity/property suites can grow in
+the default tier without bloating the smoke loop.
 """
 
 from __future__ import annotations
@@ -31,11 +34,24 @@ SLOW_MODULES = {
     "test_fault_tolerance.py",
 }
 
+FAST_MODULES = {
+    # the <60 s tier-1 smoke set: core semantics, golden regressions (incl.
+    # the fused-kernel tiling/time-major invariance checks), roofline.
+    # Full composed-kernel parity (test_kernels, test_fused_macro*) lives
+    # in the default tier — it's worth real minutes, not smoke seconds.
+    "test_core.py",
+    "test_golden_regression.py",
+    "test_roofline.py",
+}
+
 
 def pytest_collection_modifyitems(config, items):
     for item in items:
-        if os.path.basename(str(item.fspath)) in SLOW_MODULES:
+        base = os.path.basename(str(item.fspath))
+        if base in SLOW_MODULES:
             item.add_marker(pytest.mark.slow)
+        if base in FAST_MODULES:
+            item.add_marker(pytest.mark.fast)
 
 
 @pytest.fixture(autouse=True)

@@ -4,6 +4,14 @@ The MoE expert-parallel paths (a2a / 2D / dense-EP) must match the dense
 reference numerically — run on 8 simulated host devices in a subprocess
 (device count is locked at jax init, so the main test process stays at 1).
 Sharding-rule unit tests run in-process.
+
+Triage note (PR 2): the long-standing failure here was NOT a numerical
+tolerance issue — the subprocess crashed at mesh construction on jax
+versions without ``jax.sharding.AxisType`` / ``jax.shard_map`` before any
+comparison ran.  With the ``repro.compat`` shims, all four EP paths match
+the dense reference within the original 2e-4 tolerances on both jax
+generations; no tolerance was loosened and no accumulation-order change was
+needed.
 """
 
 import os
@@ -25,10 +33,10 @@ _MOE_SCRIPT = textwrap.dedent("""
     import jax, jax.numpy as jnp
     import numpy as np
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro import compat
     from repro.nn import moe, module
 
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = compat.make_mesh((2, 4), ("data", "model"))
     E, D, F, K = 8, 16, 32, 2
     B, S = 4, 8
     key = jax.random.PRNGKey(0)

@@ -8,8 +8,12 @@ both sides get identical XLA arithmetic contraction (FMA) treatment.
 
 Covers: both modes (kwn/nld), all three IMA curves (linear / NLQ /
 NL-activation), odd shapes (n_in not a multiple of 256, n_out not a multiple
-of 128, batch not a multiple of 8), SNL on/off, and the model/serving layers
-built on top (forward_silicon(fused=True), SNNEventEngine).
+of 128, batch not a multiple of 8), SNL on/off, multi-macro tiling (layers
+wider than 256x128 stay fused — no composed-path fallback), time-major
+sequences (T folded into the kernel grid, membrane carried in VMEM), and the
+model/serving layers built on top (forward_silicon(fused=True/"step"/"seq"),
+SNNEventEngine time-major batching).  The exhaustive shape sweeps live in
+tests/test_fused_macro_properties.py.
 """
 
 import functools
@@ -129,6 +133,109 @@ class TestFusedKwnParity:
                                       np.asarray(flat[1]))
 
 
+class TestFusedSeqParity:
+    """Tiled multi-macro + time-major acceptance: big layers and long
+    streams run through the fused path bitwise-equal to the seq oracle."""
+
+    def _operands(self, t, m, n_in, n_out, seed=0):
+        keys = jax.random.split(jax.random.PRNGKey(seed), 6)
+        x = _tern(keys[0], (t, m, n_in))
+        msb = _tern(keys[1], (n_in, n_out))
+        lsb = _tern(keys[2], (n_in, n_out))
+        cb = _codebook("nlq")
+        scale = jax.random.uniform(keys[3], (n_out,), minval=0.05,
+                                   maxval=0.3)
+        v = jax.random.normal(keys[4], (m, n_out)) * 0.5
+        noise = 0.05 * jnp.sign(jax.random.normal(keys[5], (t, m, n_out)))
+        return x, msb, lsb, cb, scale, v, noise
+
+    def _assert_seq(self, t, m, n_in, n_out):
+        x, msb, lsb, cb, scale, v, noise = self._operands(t, m, n_in, n_out)
+        kw = dict(mode="kwn", k=12, drive_gain=0.25)
+        out = ops.fused_macro_seq(x, msb, lsb, cb.boundaries, cb.levels,
+                                  scale, v, noise, **kw)
+        want = jax.jit(functools.partial(ref.fused_macro_seq_ref, **kw))(
+            x, msb, lsb, cb.boundaries, cb.levels, scale, v, noise)
+        want = list(want)
+        want[4] = want[4][..., 0]
+        for name, a, b in zip(("mac", "v_mem", "spikes", "mask",
+                               "adc_steps"), out, want):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b),
+                                          err_msg=f"{name} mismatch")
+
+    def test_large_layer_stays_fused(self):
+        """M>128 (two row tiles), K>256 (two K tiles), N>128 (two col
+        tiles): the whole virtual macro grid runs inside one kernel."""
+        self._assert_seq(t=2, m=144, n_in=512, n_out=256)
+
+    def test_long_stream_time_major(self):
+        """T=16 event stream in a single launch, membrane carried in
+        VMEM."""
+        self._assert_seq(t=16, m=16, n_in=256, n_out=128)
+
+    def test_long_stream_large_layer(self):
+        """Both at once: the acceptance shape for this PR."""
+        self._assert_seq(t=16, m=8, n_in=512, n_out=256)
+
+    def test_t1_seq_equals_step(self):
+        """T=1 degenerate: seq and step entry points agree bitwise."""
+        x, msb, lsb, cb, scale, v, noise = self._operands(1, 16, 256, 128)
+        kw = dict(mode="kwn", k=12, drive_gain=0.25)
+        seq = ops.fused_macro_seq(x, msb, lsb, cb.boundaries, cb.levels,
+                                  scale, v, noise, **kw)
+        step = ops.fused_macro_step(x[0], msb, lsb, cb.boundaries,
+                                    cb.levels, scale, v, noise[0], **kw)
+        np.testing.assert_array_equal(np.asarray(seq[0][0]),
+                                      np.asarray(step[0]))
+        np.testing.assert_array_equal(np.asarray(seq[1]),
+                                      np.asarray(step[1]))
+        np.testing.assert_array_equal(np.asarray(seq[4][0]),
+                                      np.asarray(step[4]))
+
+
+class TestTilePlanner:
+    """plan_tiles / plan_fused_tiles: padded geometry the kernel asserts
+    on, branch-aligned NLD padding, and the macro accounting the energy
+    model consumes."""
+
+    def test_single_macro_is_one_tile(self):
+        from repro.kernels import fused_macro
+        plan = fused_macro.plan_tiles(16, 256, 128, 128, t=4)
+        assert plan.grid == (1, 4, 1, 1)
+        assert plan.bn == 128 and plan.nc_pad == 128 and plan.n_pad == 128
+
+    def test_large_layer_grid_and_divisibility(self):
+        from repro.kernels import fused_macro
+        plan = fused_macro.plan_tiles(144, 512, 256, 256, t=2)
+        assert plan.grid == (2, 2, 2, 2)
+        assert plan.m_pad % plan.bm == 0
+        assert plan.k_pad % plan.bk == 0
+        assert plan.nc_pad % plan.bn == 0
+        assert plan.n_valid == 256
+        assert plan.vmem_resident_bytes > 0
+
+    def test_nld_padding_is_branch_aligned(self):
+        from repro.kernels import fused_macro
+        # J=3 branches, n=130: nc=390 > 128 so columns tile; padding must
+        # keep J * n_pad a multiple of bn so tiles never split a ragged pad
+        plan = fused_macro.plan_tiles(8, 256, 390, 130, mode="nld",
+                                      n_branches=3)
+        assert plan.nc_pad == 3 * plan.n_pad
+        assert plan.nc_pad % plan.bn == 0
+        assert plan.n_pad >= 130
+
+    def test_macro_plan_counts_physical_macros(self):
+        cb = _codebook("nlq")
+        fw = macro_lib.FusedMacroWeights(
+            msb=jnp.zeros((512, 256), jnp.int8),
+            lsb=jnp.zeros((512, 256), jnp.int8),
+            scale=jnp.ones((256,)), boundaries=cb.boundaries,
+            levels=cb.levels, w_dend=None, mode="kwn")
+        plan, geo = macro_lib.plan_fused_tiles(128, fw, 256, n_steps=16)
+        assert geo.n_macros == 4                 # 2 row x 2 col 256x128 tiles
+        assert plan.grid == (1, 16, 2, 2)
+
+
 class TestFusedNldParity:
     @pytest.mark.parametrize("m,n_in,n_out,j", [
         (16, 256, 128, 2),
@@ -188,6 +295,19 @@ class TestForwardSiliconFused:
                                           np.asarray(tf[name]),
                                           err_msg=f"telemetry {name}")
 
+    def test_step_and_seq_paths_agree(self):
+        """Per-step launches vs one time-major launch: bitwise-identical
+        logits and telemetry (time-major batching is invisible)."""
+        snn, p, ev, cfg = self._setup("kwn")
+        key = jax.random.PRNGKey(2)
+        ls, ts = snn.forward_silicon(p, ev, cfg, key, fused="step")
+        lq, tq = snn.forward_silicon(p, ev, cfg, key, fused="seq")
+        np.testing.assert_array_equal(np.asarray(ls), np.asarray(lq))
+        for name in ts:
+            np.testing.assert_array_equal(np.asarray(ts[name]),
+                                          np.asarray(tq[name]),
+                                          err_msg=f"telemetry {name}")
+
     def test_nld_runs_and_reports_full_ramp(self):
         snn, p, ev, cfg = self._setup("nld")
         logits, tele = snn.forward_silicon(p, ev, cfg, jax.random.PRNGKey(2),
@@ -238,3 +358,27 @@ class TestSNNEventEngine:
 
         rep = engine.energy_report("nmnist")
         assert rep["requests"] == 10 and rep["pj_per_sop"] > 0
+
+    def test_time_major_and_per_step_engines_agree(self):
+        from repro.data import events as ev_lib
+        from repro.models import snn
+        from repro.serve.engine import EventRequest, SNNEventEngine
+        dcfg = ev_lib.NMNIST
+        ds = ev_lib.EventDataset(dcfg)
+        cfg = snn.SNNConfig(n_in=dcfg.n_in, n_steps=dcfg.n_steps,
+                            n_classes=dcfg.n_classes, mode="kwn", k=12)
+        p = snn.init_params(cfg, jax.random.PRNGKey(0))
+        ev, lab = ds.sample(jax.random.PRNGKey(1), 3)
+
+        results = {}
+        for time_major in (True, False):
+            engine = SNNEventEngine(cfg, p, batch_slots=4, seed=5,
+                                    time_major=time_major)
+            for i in range(3):
+                engine.submit(EventRequest(uid=i, events=ev[i],
+                                           label=int(lab[i])))
+            results[time_major] = engine.run()
+        for a, b in zip(results[True], results[False]):
+            np.testing.assert_array_equal(np.asarray(a.logits),
+                                          np.asarray(b.logits))
+            assert a.pred == b.pred and a.adc_steps == b.adc_steps

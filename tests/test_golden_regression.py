@@ -65,6 +65,91 @@ class TestKwnEarlyStopGolden:
             np.bincount(np.asarray(steps), minlength=32), GOLDEN_STEP_HIST)
 
 
+class TestTilingInvarianceGolden:
+    """Tiling and time-major batching must not move the measured early-stop
+    statistics (or the pJ/SOP figures derived from them): the same golden
+    MAC inputs produce the identical PR 1 step histogram whether the fused
+    kernel runs one step on one macro-wide tile, a forced multi-tile grid,
+    or a whole time-major sequence."""
+
+    K_WIN = 12
+
+    def _operands(self):
+        from repro.core import ternary as ternary_lib
+        key = jax.random.PRNGKey(42)
+        ks = jax.random.split(key, 3)
+        sparse = jax.random.uniform(ks[0], (64, 256)) < 0.05
+        x = (jax.random.randint(ks[1], (64, 256), -1, 2) * sparse
+             ).astype(jnp.int8)
+        w = jax.random.randint(ks[2], (256, 128), -3, 4).astype(jnp.float32)
+        msb, lsb = ternary_lib.weight_decompose(w)
+        cb = ima_lib.nlq_codebook(5, -24.0, 24.0)
+        scale = jnp.ones((128,))
+        v = jnp.zeros((64, 128))
+        return x, msb.astype(jnp.int8), lsb.astype(jnp.int8), cb, scale, v
+
+    def _hist(self, steps):
+        return np.bincount(np.asarray(steps).reshape(-1), minlength=32)
+
+    def test_fused_step_histogram_matches_golden(self):
+        x, msb, lsb, cb, scale, v = self._operands()
+        out = ops.fused_macro_step(x, msb, lsb, cb.boundaries, cb.levels,
+                                   scale, v, jnp.zeros_like(v),
+                                   mode="kwn", k=self.K_WIN)
+        np.testing.assert_array_equal(self._hist(out[4]), GOLDEN_STEP_HIST)
+
+    def test_forced_tiling_histogram_invariant(self):
+        """bk=64, bn=32 forces a 4x4 (K, col) tile grid over the same
+        macro: digital partial-sum accumulation must not move a single
+        histogram bin."""
+        x, msb, lsb, cb, scale, v = self._operands()
+        out = ops.fused_macro_step(x, msb, lsb, cb.boundaries, cb.levels,
+                                   scale, v, jnp.zeros_like(v),
+                                   mode="kwn", k=self.K_WIN, bk=64, bn=32)
+        np.testing.assert_array_equal(self._hist(out[4]), GOLDEN_STEP_HIST)
+        assert float(np.asarray(out[4]).mean()) == GOLDEN_MEAN_STEPS
+
+    def test_time_major_histogram_invariant(self):
+        """The same events at every time step must report the golden
+        histogram at every time step (adc_steps depend only on the MAC, not
+        the carried membrane)."""
+        x, msb, lsb, cb, scale, v = self._operands()
+        t = 4
+        xs = jnp.broadcast_to(x, (t,) + x.shape)
+        noise = jnp.zeros((t,) + v.shape)
+        out = ops.fused_macro_seq(xs, msb, lsb, cb.boundaries, cb.levels,
+                                  scale, v, noise, mode="kwn", k=self.K_WIN)
+        for step in range(t):
+            np.testing.assert_array_equal(self._hist(out[4][step]),
+                                          GOLDEN_STEP_HIST)
+
+    def test_pj_per_sop_invariant_under_tiling(self):
+        """The serving energy figure is derived from measured mean steps;
+        identical histograms must give bit-identical pJ/SOP under tiling
+        and time-major batching."""
+        x, msb, lsb, cb, scale, v = self._operands()
+        ref_steps = kwn_lib.kwn_select(_golden_mac(), self.K_WIN,
+                                       cb).adc_steps
+        variants = [
+            ops.fused_macro_step(x, msb, lsb, cb.boundaries, cb.levels,
+                                 scale, v, jnp.zeros_like(v), mode="kwn",
+                                 k=self.K_WIN, bk=64, bn=32)[4],
+            ops.fused_macro_seq(jnp.broadcast_to(x, (2,) + x.shape), msb,
+                                lsb, cb.boundaries, cb.levels, scale, v,
+                                jnp.zeros((2,) + v.shape), mode="kwn",
+                                k=self.K_WIN)[4][1],
+        ]
+        rate = energy.SPIKE_RATES["nmnist"]
+        want = energy.kwn_step_energy(
+            self.K_WIN, rate,
+            adc_steps=float(np.asarray(ref_steps).mean())).total
+        for steps in variants:
+            got = energy.kwn_step_energy(
+                self.K_WIN, rate,
+                adc_steps=float(np.asarray(steps).mean())).total
+            assert got == want
+
+
 class TestEnergyModelGolden:
     """Calibrated pJ/SOP figures (Table I cells).  The model was calibrated
     once against the paper's measured silicon; any code change that moves

@@ -154,7 +154,8 @@ class TestRooflineModelValidation:
             return jax.value_and_grad(lambda pp: lm.loss_fn(pp, bt, cfg)[0])(p)
 
         compiled = jax.jit(train_like).lower(params, batch).compile()
-        ca = compiled.cost_analysis()
+        from repro import compat
+        ca = compat.cost_analysis_dict(compiled)
         hlo_flops = float(ca["flops"])
 
         fwd_i, _ = flops_model.fwd_flops_per_token(cfg, "train", s,
