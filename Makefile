@@ -1,14 +1,32 @@
 # Test tiers.  `make smoke` is the tier-1 inner loop (<60 s): core
 # semantics, kernel parity smoke, golden regressions, roofline.  `make test`
 # is the full suite (~10 min; the slow tier spawns multi-device
-# subprocesses and training loops).
+# subprocesses and training loops).  `make lint` runs ruff when installed
+# plus the stdlib fallback linter (tools/lint.py) always, so the gate works
+# in the minimal container too.  `make bench` runs the fused-macro
+# benchmark and writes the machine-readable perf-trajectory records CI
+# uploads per PR.
 
-PYTEST := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH)) python -m pytest
+PYTHONPATH_SRC := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
+PYTEST := $(PYTHONPATH_SRC) python -m pytest
+LINT_PATHS := src tests benchmarks examples tools
 
-.PHONY: smoke test
+.PHONY: smoke test lint bench
 
 smoke:
 	$(PYTEST) -q -m "fast and not slow"
 
 test:
 	$(PYTEST) -x -q
+
+lint:
+	@if command -v ruff >/dev/null 2>&1; then \
+		ruff check $(LINT_PATHS); \
+	else \
+		echo "ruff not installed; stdlib fallback only (CI runs ruff)"; \
+	fi
+	python tools/lint.py $(LINT_PATHS)
+
+bench:
+	$(PYTHONPATH_SRC) python benchmarks/bench_fused_macro.py \
+		--out BENCH_fused_macro.json

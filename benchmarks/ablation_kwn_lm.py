@@ -15,7 +15,6 @@ from __future__ import annotations
 import dataclasses
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import ARCHS
 from repro.configs.base import reduced

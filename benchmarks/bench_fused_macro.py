@@ -15,14 +15,25 @@
    (c) eager per-step launches (the streaming cadence where every time
    step pays Python dispatch + kernel setup — what an event-driven server
    pays when it cannot batch the sequence).
+4. **noisy**: the same time-major launch under the in-kernel Fig. 7 IMA
+   error model (counter-PRNG draws generated inside the kernel) vs the
+   clean launch — the cost of noise-faithful serving — with a bitwise
+   parity check against the counter-based ``ref.py`` noisy oracle and the
+   KWN early-stop histogram under noise next to the clean one.
 
 Also emits the measured KWN early-stop step statistics (histogram + mean) the
 energy model consumes — the fused kernel reports them per row, so the energy
 figures below come from *measured* ramp activity, not the analytic fit.
+
+Run as a script to print the full report; ``--out PATH`` additionally
+writes the machine-readable trajectory records (fixed schema: op, shape,
+mode, median_ms, speedup) that ``make bench`` / CI track per PR as
+``BENCH_fused_macro.json``.
 """
 
 from __future__ import annotations
 
+import functools
 import time
 
 import jax
@@ -30,7 +41,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import energy, ima as ima_lib, macro as macro_lib
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 M, N_IN, N_OUT = 128, 256, 128   # batch x the physical macro geometry
 K_WIN = 12
@@ -77,13 +88,17 @@ def _fused_step(x, msb, lsb, cb, scale, v, noise):
 
 
 def _time(fn, args, iters: int = 20) -> float:
+    """Median per-call wall time in microseconds (median over ``iters``
+    timed calls — robust to the scheduler hiccups a mean would absorb)."""
     out = fn(*args)                       # compile + warm up
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    samples = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    jax.block_until_ready(out)
-    return (time.perf_counter() - t0) / iters * 1e6
+        jax.block_until_ready(out)
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples)) * 1e6
 
 
 def _seq_variants(t=T_SEQ, m=M, n_in=N_IN, n_out=N_OUT):
@@ -140,6 +155,70 @@ def _seq_variants(t=T_SEQ, m=M, n_in=N_IN, n_out=N_OUT):
     }
 
 
+def _step_histogram(steps) -> list[int]:
+    full = 2 ** CODE_BITS - 1
+    return np.bincount(np.asarray(steps).reshape(-1),
+                       minlength=full + 1).tolist()
+
+
+def _noisy_variants(t=T_SEQ, m=M, n_in=N_IN, n_out=N_OUT):
+    """Noisy vs clean time-major launches: what noise-faithful serving costs.
+
+    The noisy launch generates every Fig. 7 conversion-error draw (and the
+    SNL sign noise) inside the kernel, so it streams exactly the same
+    operands as the clean launch — the delta is pure in-VMEM counter-PRNG
+    arithmetic.  Parity is checked bitwise against the counter-based noisy
+    oracle, and the KWN early-stop histograms are reported side by side
+    (noise spreads the code distribution, which shifts where the ramp's
+    K-th crossing lands).
+    """
+    x, msb, lsb, cb, scale, v, _ = _operands(
+        jax.random.PRNGKey(3), m=m, n_in=n_in, n_out=n_out, t=t)
+    noise_p = ima_lib.kernel_noise_params(ima_lib.IMANoiseModel(), cb)
+    kw = dict(mode="kwn", k=K_WIN, drive_gain=DRIVE_GAIN)
+
+    @jax.jit
+    def clean(x, v):
+        return ops.fused_macro_seq(x, msb, lsb, cb.boundaries, cb.levels,
+                                   scale, v, None, **kw)
+
+    @jax.jit
+    def noisy(x, v):
+        return ops.fused_macro_seq(x, msb, lsb, cb.boundaries, cb.levels,
+                                   scale, v, None, ima_noise=noise_p,
+                                   snl_amp=0.05, seed=7, **kw)
+
+    args = (x, v)
+    ms_clean = _time(clean, args, iters=5) / 1e3
+    ms_noisy = _time(noisy, args, iters=5) / 1e3
+
+    out_noisy = noisy(x, v)
+    want = jax.jit(functools.partial(
+        ref.fused_macro_seq_ref, ima_noise=noise_p, snl_amp=0.05, seed=7,
+        **kw))(x, msb, lsb, cb.boundaries, cb.levels, scale, v, None)
+    want = (want[0], want[1], want[2], want[3], want[4][..., 0])
+    parity = bool(all(jnp.array_equal(a, b)
+                      for a, b in zip(out_noisy, want)))
+
+    out_clean = clean(x, v)
+    clean_steps, noisy_steps = out_clean[4], out_noisy[4]
+    return {
+        "t": t, "batch": m, "geometry": f"{n_in}x{n_out}",
+        "ms_clean": round(ms_clean, 1),
+        "ms_noisy": round(ms_noisy, 1),
+        "noise_overhead": round(ms_noisy / ms_clean, 2),
+        "parity_vs_noisy_oracle": parity,
+        "early_stop": {
+            "clean_mean_steps": round(float(np.asarray(clean_steps).mean()),
+                                      2),
+            "noisy_mean_steps": round(float(np.asarray(noisy_steps).mean()),
+                                      2),
+            "clean_step_histogram": _step_histogram(clean_steps),
+            "noisy_step_histogram": _step_histogram(noisy_steps),
+        },
+    }
+
+
 def _step_comparison(m, n_in, n_out, key):
     """Fused-vs-composed single step at a given layer geometry."""
     x, msb, lsb, cb, scale, v, noise = _operands(key, m=m, n_in=n_in,
@@ -173,6 +252,7 @@ def run() -> dict:
     big_plan, big_geo = macro_lib.plan_fused_tiles(M, big_fw, LARGE_N_OUT)
 
     seq_stats = _seq_variants()
+    noisy_stats = _noisy_variants()
 
     # Early-stop statistics the energy model consumes (measured, per row).
     steps = np.asarray(fused[3]).reshape(-1)
@@ -199,6 +279,7 @@ def run() -> dict:
             "parity": big_parity,
         },
         "sequence": seq_stats,
+        "noisy": noisy_stats,
         "early_stop": {
             "mean_adc_steps": round(mean_steps, 2),
             "full_ramp_steps": full,
@@ -210,6 +291,67 @@ def run() -> dict:
     }
 
 
-if __name__ == "__main__":
+def records(report: dict) -> list[dict]:
+    """Flatten the report into fixed-schema perf-trajectory records.
+
+    Schema (every record, exactly these keys):
+      op        — what ran (fused_step / composed_step / ... / fused_seq_noisy)
+      shape     — "BxIxN[xT]" geometry string
+      mode      — "kwn" or "kwn+noise"
+      median_ms — median wall time, milliseconds
+      speedup   — vs the record's natural baseline (1.0 for baselines)
+
+    CI uploads this as ``BENCH_fused_macro.json`` per PR, so the perf
+    trajectory of the fused path is a diffable artifact, not a claim.
+    """
+    g, b = report["geometry"], report["batch"]
+    big, seq, noisy = (report["large_layer"], report["sequence"],
+                       report["noisy"])
+    shape = f"{b}x{g}"
+    big_shape = f"{big['batch']}x{big['geometry']}"
+    seq_shape = f"{seq['batch']}x{seq['geometry']}x{seq['t']}"
+    noisy_shape = f"{noisy['batch']}x{noisy['geometry']}x{noisy['t']}"
+    us = 1e-3
+    return [
+        {"op": "composed_step", "shape": shape, "mode": "kwn",
+         "median_ms": round(report["us_composed"] * us, 3), "speedup": 1.0},
+        {"op": "fused_step", "shape": shape, "mode": "kwn",
+         "median_ms": round(report["us_fused"] * us, 3),
+         "speedup": report["speedup"]},
+        {"op": "composed_step", "shape": big_shape, "mode": "kwn",
+         "median_ms": round(big["us_composed"] * us, 3), "speedup": 1.0},
+        {"op": "fused_step_tiled", "shape": big_shape, "mode": "kwn",
+         "median_ms": round(big["us_fused_tiled"] * us, 3),
+         "speedup": big["speedup"]},
+        {"op": "fused_seq_per_step_scan", "shape": seq_shape, "mode": "kwn",
+         "median_ms": seq["ms_per_step_scan"], "speedup": 1.0},
+        {"op": "fused_seq_time_major", "shape": seq_shape, "mode": "kwn",
+         "median_ms": seq["ms_time_major"],
+         "speedup": seq["speedup_vs_scan"]},
+        {"op": "fused_seq_time_major", "shape": noisy_shape, "mode": "kwn",
+         "median_ms": noisy["ms_clean"], "speedup": 1.0},
+        {"op": "fused_seq_noisy", "shape": noisy_shape, "mode": "kwn+noise",
+         "median_ms": noisy["ms_noisy"],
+         "speedup": round(1.0 / noisy["noise_overhead"], 2)},
+    ]
+
+
+def main(argv=None):
+    import argparse
     import json
-    print(json.dumps(run(), indent=1))
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default=None,
+                    help="write fixed-schema trajectory records to this "
+                         "JSON file (e.g. BENCH_fused_macro.json)")
+    args = ap.parse_args(argv)
+    report = run()
+    print(json.dumps(report, indent=1))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump({"bench": "fused_macro", "records": records(report)},
+                      f, indent=1)
+        print(f"\nwrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -5,7 +5,6 @@ Paper (real datasets): N-MNIST NLD 97.2 / KWN 96.2; DVS Gesture NLD 95.5 /
 KWN 93.8; Quiroga NLD 96.1.  Synthetic stand-ins: the *ordering* (NLD > KWN)
 and mechanism deltas are the reproducible claims (DESIGN.md data caveat)."""
 
-from jax import random
 
 from benchmarks import _snn_cache as C
 from repro.core import ima

@@ -4,10 +4,9 @@ serial-LIF update reduction (10x @ K=12 of 128).
 Reports both the calibrated model AND the ramp-scan measurement on the
 synthetic event streams (adc_steps from the kwn kernel semantics)."""
 
-import jax
 
 from benchmarks import _snn_cache as C
-from repro.core import energy, kwn
+from repro.core import energy
 
 
 def run() -> dict:
@@ -31,6 +30,5 @@ def run() -> dict:
             "lif_updates_dense": 128,
             "measured_lif_speedup": round(128 / tele["lif_updates"], 1),
         }
-    d = kwn.lif_latency_updates(12, 128)
     out["paper"] = {"adc_saving": 0.30, "lif_speedup": "10x"}
     return out

@@ -6,7 +6,6 @@ dryrun_results/*.json, perf_results/*.json, benchmarks/.cache/results/*.json.
 
 from __future__ import annotations
 
-import glob
 import json
 import os
 

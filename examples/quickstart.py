@@ -11,7 +11,7 @@ latency/energy numbers the silicon measures.
 import jax
 import jax.numpy as jnp
 
-from repro.core import dendrite, energy, ima, kwn, lif, macro, ternary
+from repro.core import dendrite, energy, lif, macro, ternary
 
 key = jax.random.PRNGKey(0)
 

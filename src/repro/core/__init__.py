@@ -6,8 +6,10 @@ kwn       — top-K winner selection with ramp early stop (C3)
 dendrite  — nonlinear dendrites, Eq. (2) (C4)
 lif       — digital LIF + SNL + PRBS noise, Eq. (1) (C5)
 prbs      — LFSR noise generator
+ctrprng   — counter-based Threefry PRNG shared by the fused kernel + oracles
 macro     — 256x128 macro simulator + virtual macro-grid tiling
 energy    — calibrated energy/latency model (Fig. 9, Table I)
 """
 
-from repro.core import dendrite, energy, ima, kwn, lif, macro, prbs, ternary  # noqa: F401
+from repro.core import (  # noqa: F401
+    ctrprng, dendrite, energy, ima, kwn, lif, macro, prbs, ternary)

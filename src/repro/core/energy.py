@@ -16,7 +16,6 @@ Dynamic energy scales ~VDD^2 (Fig. 9b).  All energies in pJ, VDD in volts.
 
 from __future__ import annotations
 
-import math
 from typing import NamedTuple
 
 MACRO_ROWS, MACRO_COLS = 256, 128

@@ -16,7 +16,7 @@ Two execution paths:
   * **composed** (``cim_mac`` / ``kwn_forward`` / ``nld_forward``): each
     pipeline stage is a separate jnp/kernel call with HBM-visible
     intermediates — use it when you need those intermediates (codebook
-    studies, noise injection, training STE paths);
+    studies, training STE paths);
   * **fused** (``pack_kwn_weights``/``pack_nld_weights`` + ``fused_step`` /
     ``fused_seq``): the whole MAC -> IMA -> mode-head -> LIF step runs
     inside one Pallas kernel (``repro.kernels.fused_macro``), the way the
@@ -25,7 +25,10 @@ Two execution paths:
     + K tiles with digital partial-sum accumulation), and ``fused_seq``
     folds the whole event sequence into one launch with the LIF membrane
     carried in VMEM across time steps.  This is the inference hot path; it
-    is bitwise-equal to the composed reference at f32 accumulation.
+    is bitwise-equal to the composed reference at f32 accumulation, and it
+    carries the Fig. 7 IMA error model *inside* the kernel
+    (``fused_kernel_noise`` + the counter PRNG in ``core.ctrprng``), so
+    noisy silicon evaluation no longer leaves the fused path.
     ``plan_fused_tiles`` exposes the tile planner (padding, grid, VMEM
     footprint, macro-invocation count for the energy model).
 """
@@ -33,7 +36,7 @@ Two execution paths:
 from __future__ import annotations
 
 import math
-from typing import Callable, NamedTuple
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -217,13 +220,36 @@ def plan_fused_tiles(batch: int, fw: FusedMacroWeights, n_out: int,
     return plan, geometry(n_in, nc)
 
 
+def fused_kernel_noise(fw: FusedMacroWeights,
+                       cfg: CIMMacroConfig) -> "ima_lib.IMAKernelNoise | None":
+    """The kernel-consumable Fig. 7 noise struct for a packed weight set.
+
+    Binds ``cfg.ima_noise`` to the full-scale range of the ramp the packed
+    weights actually sweep (integer MAC units in KWN mode, float units in
+    NLD mode — both are ``±cfg.mac_range`` by construction of the packers).
+    Returns None when the config is ideal, so callers can pass the result
+    straight to ``fused_step``/``fused_seq``.
+    """
+    if cfg.ima_noise is None:
+        return None
+    cb = ima_lib.RampCodebook(fw.levels, fw.boundaries,
+                              -cfg.mac_range, cfg.mac_range)
+    return ima_lib.kernel_noise_params(cfg.ima_noise, cb)
+
+
 def fused_step(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
-               noise: jax.Array, *, k: int = 12, drive_gain: float = 1.0,
-               beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
+               noise: jax.Array | None = None, *, k: int = 12,
+               drive_gain: float = 1.0, beta: float = 0.9,
+               v_th1: float = 1.0, v_th2: float = 0.6,
                v_reset: float = 0.0, v_lim: float = 8.0,
-               use_snl: bool = True):
+               use_snl: bool = True, ima_noise=None, snl_amp: float = 0.0,
+               seed=0, step_offset=0):
     """One fused macro time step: spikes (..., I), v/noise (..., N).
 
+    ``ima_noise`` (``ima.IMAKernelNoise``, see ``fused_kernel_noise``)
+    enables the in-kernel Fig. 7 conversion-error model; with
+    ``noise=None`` the SNL stream is generated in-kernel too (counter PRNG
+    at ``snl_amp``), keyed on ``(seed, step_offset)``.
     Returns (v_out, spikes_out, mask, adc_steps, mac) — the LIF state update,
     the KWN winner mask (ones in NLD mode), the per-row early-stop ADC step
     count, and the raw integer-unit MAC for telemetry.
@@ -234,17 +260,22 @@ def fused_step(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
         s, fw.msb, fw.lsb, fw.boundaries, fw.levels, fw.scale, v, noise,
         fw.w_dend, mode=fw.mode, k=k, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-        use_snl=use_snl)
+        use_snl=use_snl, ima_noise=ima_noise, snl_amp=snl_amp, seed=seed,
+        step_offset=step_offset)
     return v_out, spk, mask, steps, mac
 
 
 def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
-              noise: jax.Array, *, k: int = 12, drive_gain: float = 1.0,
-              beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
+              noise: jax.Array | None = None, *, k: int = 12,
+              drive_gain: float = 1.0, beta: float = 0.9,
+              v_th1: float = 1.0, v_th2: float = 0.6,
               v_reset: float = 0.0, v_lim: float = 8.0,
-              use_snl: bool = True):
+              use_snl: bool = True, ima_noise=None, snl_amp: float = 0.0,
+              seed=0, step_offset=0):
     """A whole fused event sequence: spikes (T, ..., I), v (..., N),
-    noise (T, ..., N).
+    noise (T, ..., N) — or None for the in-kernel counter noise streams
+    (see ``fused_step``; this is the noisy-silicon serving path, with no
+    pre-drawn noise tensor and no composed-path fallback).
 
     One kernel launch covers all T time steps (time-major grid axis, LIF
     membrane carried in VMEM) and any virtual-macro tiling the layer needs.
@@ -257,7 +288,8 @@ def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
         s, fw.msb, fw.lsb, fw.boundaries, fw.levels, fw.scale, v, noise,
         fw.w_dend, mode=fw.mode, k=k, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-        use_snl=use_snl)
+        use_snl=use_snl, ima_noise=ima_noise, snl_amp=snl_amp, seed=seed,
+        step_offset=step_offset)
     return v_out, spk, mask, steps, mac
 
 

@@ -17,7 +17,6 @@ so CIM-mode layers can be trained with QAT.
 
 from __future__ import annotations
 
-import functools
 from typing import Tuple
 
 import jax

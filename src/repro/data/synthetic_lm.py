@@ -30,7 +30,6 @@ class DataConfig:
 class SyntheticLM:
     def __init__(self, cfg: DataConfig):
         self.cfg = cfg
-        rng = np.random.default_rng(cfg.seed)
         # fixed Zipf-ish unigram distribution over the vocab
         ranks = np.arange(1, cfg.vocab_size + 1, dtype=np.float64)
         probs = ranks ** (-cfg.zipf_a)

@@ -18,7 +18,14 @@ TPU-native equivalent of staying inside the macro: one grid step per
   2. on the last (col-tile, K-tile) of a time step, IMA ramp conversion of
      the whole accumulator against the in-VMEM boundary set (linear / NLQ /
      NL-activation — the codebook is data, so one kernel serves all three
-     ramp programs);
+     ramp programs), optionally injecting the Fig. 7 silicon error model
+     (INL + comparator offset + Gaussian thermal noise, in code LSBs)
+     with per-step per-column draws generated *in kernel* by the
+     counter-based Threefry PRNG (``core.ctrprng``) — no pre-drawn noise
+     tensor, no composed-path fallback, and, because every draw is a pure
+     function of ``(seed, step, absolute row, logical column)``, the noisy
+     output is launch-shape-invariant and bitwise-equal to the
+     ``kernels/ref.py`` oracle;
   3. the mode head: KWN descending-ramp top-K with early-stop step counts
      (``kwn`` mode) or the per-branch NL-activation + soma combine (``nld``
      mode);
@@ -77,6 +84,8 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+
+from repro.core import ctrprng
 
 DEFAULT_BM = 128
 DEFAULT_BK = 256  # the macro's row count: one K-tile == one physical macro
@@ -242,12 +251,58 @@ def _mask_padded_columns(codes: jax.Array, n_valid: int) -> jax.Array:
     return jnp.where(col < n_valid, codes, -1)
 
 
+def _noise_ids(shape, row0, per_branch: int, logical_n: int):
+    """Global (row, logical-column) counter words for the noise streams.
+
+    Rows are absolute batch rows (``row0`` = row-tile offset, computed from
+    ``program_id`` at kernel top level — interpret mode cannot lower
+    ``program_id`` inside a ``pl.when`` sub-jaxpr).  Columns are *logical*:
+    a padded branch-major layout stores branch j of column p at
+    ``j * per_branch + p``, but the counter uses ``j * logical_n + p`` so
+    the draw a real column receives is invariant to the tile plan's padding
+    (``per_branch`` changes with (bn, J); ``logical_n`` never does).
+    """
+    rows = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + row0
+    col = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    lcol = (col // per_branch) * logical_n + col % per_branch
+    return rows, lcol
+
+
+def _ima_noisy_codes(codes, x, seed, step, *, row0, per_branch, logical_n,
+                     ima_noise, n_codes):
+    """Counter-PRNG Fig. 7 error injection on the full-width code plane."""
+    rows, cols = _noise_ids(codes.shape, row0, per_branch, logical_n)
+    return ctrprng.noisy_ima_codes(codes, x, rows, cols, seed, step,
+                                   ima_noise, n_codes)
+
+
+def _lif_noise(noise_ref, rest_shape, seed, step, *, row0, logical_n,
+               snl_amp, use_snl):
+    """SNL noise operand: streamed input (clean path, PRBS parity) or
+    in-kernel counter sign noise (noisy path — nothing pre-drawn, nothing
+    staged through HBM)."""
+    if noise_ref is not None:
+        return noise_ref[0]
+    if not use_snl or snl_amp == 0.0:
+        return jnp.zeros(rest_shape, jnp.float32)
+    rows, cols = _noise_ids(rest_shape, row0, rest_shape[-1], logical_n)
+    sign = ctrprng.counter_sign(seed, step, rows, cols, ctrprng.TAG_SNL)
+    return jnp.float32(snl_amp) * sign
+
+
 def _seq_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
-                    scale_ref, v0_ref, noise_ref,
-                    mac_ref, v_ref, spike_ref, mask_ref, steps_ref, *,
-                    ratio, bn, n_j, n_k, n_valid, k, n_codes, beta, v_th1,
-                    v_th2, v_reset, v_lim, use_snl, drive_gain):
-    t, j, kk = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+                    scale_ref, ctl_ref, v0_ref, *rest, ratio, bm, bn, n_j,
+                    n_k, n_valid, k, n_codes, beta, v_th1, v_th2, v_reset,
+                    v_lim, use_snl, drive_gain, ima_noise, snl_amp,
+                    logical_n, has_noise_ref):
+    if has_noise_ref:
+        noise_ref, mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
+    else:
+        noise_ref = None
+        mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
+    i, t = pl.program_id(0), pl.program_id(1)
+    j, kk = pl.program_id(2), pl.program_id(3)
+    row0 = i * bm
 
     @pl.when((t == 0) & (j == 0) & (kk == 0))
     def _load_membrane():
@@ -257,15 +312,27 @@ def _seq_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
 
     @pl.when((j == n_j - 1) & (kk == n_k - 1))
     def _head():
+        seed, step = ctl_ref[0, 0], ctl_ref[0, 1] + t
         mac = mac_ref[0]                                  # (bm, N) int-valued
-        codes = _mask_padded_columns(_ramp_codes(mac, bounds_ref[...][0]),
-                                     n_valid)
+        codes = _ramp_codes(mac, bounds_ref[...][0])
+        if ima_noise is not None:
+            # The NLQ ramp sees integer-unit MACs; inject the Fig. 7 error
+            # (INL + offset + Gaussian, in code LSBs) before the sweep, so
+            # winner selection, early stop, and the LUT map-back all see
+            # the same noisy ripple-counter value the silicon registers.
+            codes = _ima_noisy_codes(codes, mac, seed, step, row0=row0,
+                                     per_branch=codes.shape[-1],
+                                     logical_n=logical_n,
+                                     ima_noise=ima_noise, n_codes=n_codes)
+        codes = _mask_padded_columns(codes, n_valid)
         maskf, steps = _kwn_sweep(codes, k, n_codes)
         recon = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
         # Winner drive: LUT value x per-column weight scale, losers exactly 0.
         drive = recon * scale_ref[...] * maskf * drive_gain
+        nz = _lif_noise(noise_ref, v_ref.shape, seed, step, row0=row0,
+                        logical_n=logical_n, snl_amp=snl_amp, use_snl=use_snl)
         v_new, spike = _lif_update(
-            v_ref[...], drive, maskf, noise_ref[0], beta=beta, v_th1=v_th1,
+            v_ref[...], drive, maskf, nz, beta=beta, v_th1=v_th1,
             v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
         v_ref[...] = v_new
         spike_ref[0] = spike
@@ -274,11 +341,17 @@ def _seq_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
 
 
 def _seq_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
-                    scale_ref, w_dend_ref, v0_ref, noise_ref,
-                    mac_ref, v_ref, spike_ref, mask_ref, steps_ref, *,
-                    ratio, bn, n_j, n_k, n_codes, n_branches, beta, v_th1,
-                    v_th2, v_reset, v_lim, drive_gain):
-    t, j, kk = pl.program_id(1), pl.program_id(2), pl.program_id(3)
+                    scale_ref, ctl_ref, w_dend_ref, v0_ref, *rest, ratio, bm,
+                    bn, n_j, n_k, n_codes, n_branches, beta, v_th1, v_th2,
+                    v_reset, v_lim, drive_gain, ima_noise, logical_n,
+                    has_noise_ref):
+    if has_noise_ref:
+        _, mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
+    else:
+        mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
+    i, t = pl.program_id(0), pl.program_id(1)
+    j, kk = pl.program_id(2), pl.program_id(3)
+    row0 = i * bm
 
     @pl.when((t == 0) & (j == 0) & (kk == 0))
     def _load_membrane():
@@ -288,22 +361,30 @@ def _seq_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
 
     @pl.when((j == n_j - 1) & (kk == n_k - 1))
     def _head():
+        seed, step = ctl_ref[0, 0], ctl_ref[0, 1] + t
         mac = mac_ref[0] * scale_ref[...]                 # (bm, J*N) float
         codes = _ramp_codes(mac, bounds_ref[...][0])
+        if ima_noise is not None:
+            # NL-activation ramp: same conversion error, float-unit range.
+            codes = _ima_noisy_codes(codes, mac, seed, step, row0=row0,
+                                     per_branch=codes.shape[-1] // n_branches,
+                                     logical_n=logical_n,
+                                     ima_noise=ima_noise, n_codes=n_codes)
         act = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
-        bm = act.shape[0]
+        bm_rows = act.shape[0]
         n = v_ref.shape[-1]
-        act3 = act.reshape(bm, n_branches, n)             # branch-major planes
+        act3 = act.reshape(bm_rows, n_branches, n)        # branch-major planes
         w_dend = w_dend_ref[...]                          # (J, N)
         drive = jnp.sum(act3 * w_dend[None, :, :], axis=1) * drive_gain
-        ones = jnp.ones((bm, n), jnp.float32)             # dense LIF update
+        ones = jnp.ones((bm_rows, n), jnp.float32)        # dense LIF update
         v_new, spike = _lif_update(
-            v_ref[...], drive, ones, noise_ref[0], beta=beta, v_th1=v_th1,
-            v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=False)
+            v_ref[...], drive, ones, jnp.zeros((bm_rows, n), jnp.float32),
+            beta=beta, v_th1=v_th1, v_th2=v_th2, v_reset=v_reset,
+            v_lim=v_lim, use_snl=False)
         v_ref[...] = v_new
         spike_ref[0] = spike
         mask_ref[0] = ones
-        steps_ref[0] = jnp.full((bm, 1), n_codes - 1, jnp.int32)
+        steps_ref[0] = jnp.full((bm_rows, 1), n_codes - 1, jnp.int32)
 
 
 # ---------------------------------------------------------------------------
@@ -312,10 +393,12 @@ def _seq_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "mode", "k", "ratio", "drive_gain", "use_snl", "bm", "bk", "bn",
-    "n_valid", "interpret") + _LIF_STATICS)
+    "n_valid", "ima_noise", "snl_amp", "logical_n",
+    "interpret") + _LIF_STATICS)
 def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                     boundaries: jax.Array, levels: jax.Array,
-                    scale: jax.Array, v: jax.Array, noise: jax.Array,
+                    scale: jax.Array, v: jax.Array,
+                    noise: jax.Array | None = None,
                     w_dend: jax.Array | None = None, *,
                     mode: str = "kwn", k: int = 12, ratio: float = 2.0,
                     drive_gain: float = 1.0, beta: float = 0.9,
@@ -323,7 +406,9 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                     v_reset: float = 0.0, v_lim: float = 8.0,
                     use_snl: bool = True, bm: int = DEFAULT_BM,
                     bk: int = DEFAULT_BK, bn: int | None = None,
-                    n_valid: int | None = None, interpret: bool = True):
+                    n_valid: int | None = None, ima_noise=None,
+                    snl_amp: float = 0.0, logical_n: int | None = None,
+                    seed=0, step_offset=0, interpret: bool = True):
     """A whole fused event sequence: T macro time steps in one kernel.
 
     x:           (T, M, K) int8 ternary inputs (time-major encoded events).
@@ -339,10 +424,28 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                  ``nld`` mode (the activation ramp sees float-unit MACs).
     v:           (M, N) f32 initial membrane state (carried across T in
                  VMEM).
-    noise:       (T, M, N) f32 pre-drawn per-step PRBS noise.
+    noise:       (T, M, N) f32 pre-drawn per-step SNL noise, or None to
+                 generate SNL noise in-kernel from the counter PRNG
+                 (amplitude ``snl_amp``) — the noisy-silicon path streams
+                 *nothing* per step.
     w_dend:      (J, N) soma combine weights (``nld`` only).
     bn:          column tile width (None = full NC width, single tile).
     n_valid:     number of real (non-padded) columns for the KWN sweep.
+    ima_noise:   ``ima.IMAKernelNoise`` (static, hashable) enabling the
+                 Fig. 7 conversion-error model at the ramp stage: per-step
+                 per-column Gaussian draws are generated *inside* the kernel
+                 by the counter PRNG (``core.ctrprng``), keyed on
+                 ``(seed, step_offset + t, absolute row, logical column)``
+                 so the stream is invariant to the launch tiling and
+                 bitwise-reproducible by ``ref.fused_macro_seq_ref``.
+                 (The hardware ``pltpu.prng_random_bits`` stream is *not*
+                 used precisely because it has neither property.)
+    snl_amp:     in-kernel SNL noise amplitude (used only when noise=None).
+    logical_n:   unpadded per-branch column count — the counter's column
+                 coordinate basis (defaults to the padded width).
+    seed:        traced int32 scalar keying both noise streams.
+    step_offset: traced int32 added to the grid time index (lets the
+                 per-step launch cadence keep the seq-identical stream).
 
     Returns (mac (T, M, NC) f32, v_out (M, N) f32, spikes (T, M, N) f32,
     mask (T, M, N) f32, adc_steps (T, M, 1) i32).
@@ -352,20 +455,26 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
     n = v.shape[-1]
     bn = nc if bn is None else bn
     n_valid = nc if n_valid is None else n_valid
+    logical_n = (nc if mode == "kwn" else n) if logical_n is None else \
+        logical_n
     assert kdim == kdim2 and msb.shape == lsb.shape
     assert m % bm == 0 and kdim % bk == 0 and nc % bn == 0, \
         (m, kdim, nc, bm, bk, bn)
-    assert v.shape == (m, n) and noise.shape == (t_steps, m, n)
+    assert v.shape == (m, n)
+    assert noise is None or noise.shape == (t_steps, m, n)
     n_codes = levels.shape[0]
     assert boundaries.shape[0] == n_codes - 1
     grid = (m // bm, t_steps, nc // bn, kdim // bk)
     n_j, n_k = grid[2], grid[3]
+    has_noise_ref = noise is not None
 
     row_spec = lambda shape: pl.BlockSpec(shape, lambda i, t, j, kk: (i, 0))
     step_spec = lambda shape: pl.BlockSpec(shape,
                                            lambda i, t, j, kk: (t, i, 0))
     const_spec = lambda shape: pl.BlockSpec(shape,
                                             lambda i, t, j, kk: (0, 0))
+    ctl = jnp.stack([jnp.asarray(seed, jnp.int32),
+                     jnp.asarray(step_offset, jnp.int32)]).reshape(1, 2)
     in_specs = [
         pl.BlockSpec((1, bm, bk), lambda i, t, j, kk: (t, i, kk)),   # x
         pl.BlockSpec((bk, bn), lambda i, t, j, kk: (kk, j)),         # msb
@@ -373,19 +482,22 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
         const_spec((1, n_codes - 1)),                                # bounds
         const_spec((1, n_codes)),                                    # levels
         const_spec((1, nc)),                                         # scale
+        const_spec((1, 2)),                                          # ctl
     ]
     inputs = [x.astype(jnp.int8), msb.astype(jnp.int8), lsb.astype(jnp.int8),
               boundaries.astype(jnp.float32).reshape(1, -1),
               levels.astype(jnp.float32).reshape(1, -1),
-              scale.astype(jnp.float32).reshape(1, -1)]
+              scale.astype(jnp.float32).reshape(1, -1),
+              ctl]
 
     if mode == "kwn":
         assert nc == n, (nc, n)
         kernel = functools.partial(
-            _seq_kwn_kernel, ratio=ratio, bn=bn, n_j=n_j, n_k=n_k,
+            _seq_kwn_kernel, ratio=ratio, bm=bm, bn=bn, n_j=n_j, n_k=n_k,
             n_valid=n_valid, k=k, n_codes=n_codes, beta=beta, v_th1=v_th1,
             v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl,
-            drive_gain=drive_gain)
+            drive_gain=drive_gain, ima_noise=ima_noise, snl_amp=snl_amp,
+            logical_n=logical_n, has_noise_ref=has_noise_ref)
     elif mode == "nld":
         assert w_dend is not None and nc % n == 0, (nc, n)
         n_branches = nc // n
@@ -393,15 +505,19 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
         in_specs.append(const_spec((n_branches, n)))                 # w_dend
         inputs.append(w_dend.astype(jnp.float32))
         kernel = functools.partial(
-            _seq_nld_kernel, ratio=ratio, bn=bn, n_j=n_j, n_k=n_k,
+            _seq_nld_kernel, ratio=ratio, bm=bm, bn=bn, n_j=n_j, n_k=n_k,
             n_codes=n_codes, n_branches=n_branches, beta=beta, v_th1=v_th1,
             v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-            drive_gain=drive_gain)
+            drive_gain=drive_gain, ima_noise=ima_noise,
+            logical_n=logical_n, has_noise_ref=has_noise_ref)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 
-    in_specs += [row_spec((bm, n)), step_spec((1, bm, n))]   # v0, noise
-    inputs += [v.astype(jnp.float32), noise.astype(jnp.float32)]
+    in_specs.append(row_spec((bm, n)))                               # v0
+    inputs.append(v.astype(jnp.float32))
+    if has_noise_ref:
+        in_specs.append(step_spec((1, bm, n)))                       # noise
+        inputs.append(noise.astype(jnp.float32))
 
     return pl.pallas_call(
         kernel,
@@ -426,7 +542,8 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
 
 def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                      boundaries: jax.Array, levels: jax.Array,
-                     scale: jax.Array, v: jax.Array, noise: jax.Array,
+                     scale: jax.Array, v: jax.Array,
+                     noise: jax.Array | None = None,
                      w_dend: jax.Array | None = None, *,
                      mode: str = "kwn", k: int = 12, ratio: float = 2.0,
                      drive_gain: float = 1.0, beta: float = 0.9,
@@ -434,16 +551,22 @@ def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                      v_reset: float = 0.0, v_lim: float = 8.0,
                      use_snl: bool = True, bm: int = DEFAULT_BM,
                      bk: int = DEFAULT_BK, bn: int | None = None,
-                     n_valid: int | None = None, interpret: bool = True):
+                     n_valid: int | None = None, ima_noise=None,
+                     snl_amp: float = 0.0, logical_n: int | None = None,
+                     seed=0, step_offset=0, interpret: bool = True):
     """One fused macro time step: the T=1 degenerate of ``fused_macro_seq``.
 
     x (M, K), v/noise (M, N); returns (mac (M, NC), v_out, spikes, mask,
-    adc_steps (M, 1)) exactly like the PR 1 single-step kernel.
+    adc_steps (M, 1)) exactly like the PR 1 single-step kernel.  With
+    ``ima_noise``, pass the scan index as ``step_offset`` to reproduce the
+    one-launch sequence stream exactly.
     """
     mac, v_out, spikes, mask, steps = fused_macro_seq(
-        x[None], msb, lsb, boundaries, levels, scale, v, noise[None], w_dend,
+        x[None], msb, lsb, boundaries, levels, scale, v,
+        None if noise is None else noise[None], w_dend,
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
         use_snl=use_snl, bm=bm, bk=bk, bn=bn, n_valid=n_valid,
-        interpret=interpret)
+        ima_noise=ima_noise, snl_amp=snl_amp, logical_n=logical_n,
+        seed=seed, step_offset=step_offset, interpret=interpret)
     return mac[0], v_out, spikes[0], mask[0], steps[0]

@@ -7,7 +7,6 @@ hardware set ``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False).
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp
@@ -103,15 +102,17 @@ def _unpad_cols(a, n: int, n_pad: int, n_branches: int):
     return branched[..., :n].reshape(*lead, n_branches * n)
 
 
-def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise,
+def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
                     w_dend=None, *, mode: str = "kwn", k: int = 12,
                     ratio: float = 2.0, drive_gain: float = 1.0,
                     beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
                     v_reset: float = 0.0, v_lim: float = 8.0,
                     use_snl: bool = True, bm: int | None = None,
-                    bk: int | None = None, bn: int | None = None):
+                    bk: int | None = None, bn: int | None = None,
+                    ima_noise=None, snl_amp: float = 0.0, seed=0,
+                    step_offset=0):
     """Batched time-major fused sequence; x (T, ..., K), v (..., N),
-    noise (T, ..., N).
+    noise (T, ..., N) or None for in-kernel counter noise.
 
     Pads the batch to the row tile, K to the macro row count, and — for
     layers wider than one macro — the column axis to the column tile (zero
@@ -119,6 +120,12 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise,
     and, in NLD mode, padded per branch so the branch-major layout
     survives).  Runs the whole sequence through one kernel launch with the
     LIF membrane carried in VMEM, then slices the padding back off.
+
+    ``ima_noise`` (an ``ima.IMAKernelNoise``) turns on the in-kernel Fig. 7
+    conversion-error model; the counter streams are keyed on *logical*
+    (row, column) coordinates, so padding and tile choice cannot move a
+    draw.  ``noise=None`` with ``snl_amp > 0`` generates the SNL sign noise
+    in-kernel as well — the noisy path streams no per-step tensors at all.
 
     Returns (mac (T, ..., NC), v_out (..., N), spikes (T, ..., N),
     mask (T, ..., N), adc_steps (T, ...)).
@@ -131,13 +138,15 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise,
     n_branches = nc // n if mode == "nld" else 1
     xm = x.reshape(t, -1, kdim)
     vm = v.reshape(-1, n)
-    nm = noise.reshape(t, -1, n)
     m0 = xm.shape[1]
     plan = _fused.plan_tiles(m0, kdim, nc, n, t, mode=mode,
                              n_branches=n_branches, bm=bm, bk=bk, bn=bn)
     xm = jnp.pad(xm, ((0, 0), (0, plan.m_pad - m0), (0, plan.k_pad - kdim)))
     vm = jnp.pad(vm, ((0, plan.m_pad - m0), (0, plan.n_pad - n)))
-    nm = jnp.pad(nm, ((0, 0), (0, plan.m_pad - m0), (0, plan.n_pad - n)))
+    nm = None
+    if noise is not None:
+        nm = noise.reshape(t, -1, n)
+        nm = jnp.pad(nm, ((0, 0), (0, plan.m_pad - m0), (0, plan.n_pad - n)))
     msb_p = _pad_cols(jnp.pad(msb, ((0, plan.k_pad - kdim), (0, 0))),
                       n, plan.n_pad, n_branches)
     lsb_p = _pad_cols(jnp.pad(lsb, ((0, plan.k_pad - kdim), (0, 0))),
@@ -151,7 +160,9 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise,
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
         use_snl=use_snl, bm=plan.bm, bk=plan.bk, bn=plan.bn,
-        n_valid=plan.n_valid, interpret=INTERPRET)
+        n_valid=plan.n_valid, ima_noise=ima_noise, snl_amp=snl_amp,
+        logical_n=n, seed=seed, step_offset=step_offset,
+        interpret=INTERPRET)
     mac = _unpad_cols(mac[:, :m0], n, plan.n_pad, n_branches)
     return (mac.reshape(t, *lead, nc),
             v_out[:m0, :n].reshape(*lead, n),
@@ -160,24 +171,29 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise,
             steps[:, :m0, 0].reshape(t, *lead))
 
 
-def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise,
+def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise=None,
                      w_dend=None, *, mode: str = "kwn", k: int = 12,
                      ratio: float = 2.0, drive_gain: float = 1.0,
                      beta: float = 0.9, v_th1: float = 1.0, v_th2: float = 0.6,
                      v_reset: float = 0.0, v_lim: float = 8.0,
                      use_snl: bool = True, bm: int | None = None,
-                     bk: int | None = None, bn: int | None = None):
+                     bk: int | None = None, bn: int | None = None,
+                     ima_noise=None, snl_amp: float = 0.0, seed=0,
+                     step_offset=0):
     """Batched fused macro step; x (..., K), v/noise (..., N).
 
     The T=1 degenerate of ``fused_macro_seq`` (one kernel launch per time
-    step).  Returns (mac (..., NC), v_out, spikes, mask (..., N),
-    adc_steps (...,)).
+    step).  With ``ima_noise``, pass the scan index as ``step_offset`` so a
+    per-step cadence draws the same stream as the one-launch sequence.
+    Returns (mac (..., NC), v_out, spikes, mask (..., N), adc_steps (...,)).
     """
     mac, v_out, spikes, mask, steps = fused_macro_seq(
-        x[None], msb, lsb, boundaries, levels, scale, v, noise[None], w_dend,
+        x[None], msb, lsb, boundaries, levels, scale, v,
+        None if noise is None else noise[None], w_dend,
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-        use_snl=use_snl, bm=bm, bk=bk, bn=bn)
+        use_snl=use_snl, bm=bm, bk=bk, bn=bn, ima_noise=ima_noise,
+        snl_amp=snl_amp, seed=seed, step_offset=step_offset)
     return mac[0], v_out, spikes[0], mask[0], steps[0]
 
 

@@ -9,8 +9,29 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import ctrprng
 from repro.core import ima as ima_lib
 from repro.core import kwn as kwn_lib
+
+
+def _noise_ids(shape):
+    """Global (row, column) counter words for a 2-D *unpadded* operand.
+
+    The kernel's logical-column mapping collapses to the plain column index
+    on unpadded layouts (KWN: branch 0 only; NLD branch-major: branch j of
+    column p sits at ``j * n + p`` — exactly ``j * logical_n + p``), so the
+    oracle's stream is the kernel's stream by construction.
+    """
+    rows = jax.lax.broadcasted_iota(jnp.int32, shape, 0)
+    cols = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return rows, cols
+
+
+def counter_snl_noise(shape, seed, step, amp: float) -> jax.Array:
+    """The in-kernel SNL sign-noise stream (noisy-silicon path oracle)."""
+    rows, cols = _noise_ids(shape)
+    sign = ctrprng.counter_sign(seed, step, rows, cols, ctrprng.TAG_SNL)
+    return jnp.float32(amp) * sign
 
 
 def ternary_mac_ref(x: jax.Array, msb: jax.Array, lsb: jax.Array,
@@ -22,7 +43,6 @@ def ternary_mac_ref(x: jax.Array, msb: jax.Array, lsb: jax.Array,
 
 def kwn_topk_ref(mac: jax.Array, boundaries: jax.Array, k: int):
     """(mask, adc_steps) via the core ramp-scan semantics."""
-    levels = jnp.concatenate([boundaries, boundaries[-1:]])  # placeholder levels
     cb = ima_lib.RampCodebook(levels=jnp.zeros(boundaries.shape[0] + 1),
                               boundaries=boundaries,
                               in_lo=float(boundaries[0]),
@@ -49,32 +69,59 @@ def nlq_convert_ref(x, boundaries, levels):
     return code, jnp.take(levels, code)
 
 
-def fused_head_ref(mac, boundaries, levels, scale, v, noise,
+def fused_head_ref(mac, boundaries, levels, scale, v, noise=None,
                    w_dend=None, *, mode: str = "kwn", k: int = 12,
                    drive_gain: float = 1.0, beta: float = 0.9,
                    v_th1: float = 1.0, v_th2: float = 0.6,
                    v_reset: float = 0.0, v_lim: float = 8.0,
-                   use_snl: bool = True):
+                   use_snl: bool = True, ima_noise=None,
+                   snl_amp: float = 0.0, seed=0, step=0):
     """The post-MAC stages of the fused step: IMA ramp conversion, mode head
     (KWN descending-ramp top-K / NLD branch activation + soma combine), and
     the LIF update.  Split out so tiled MAC oracles can reuse it verbatim.
+
+    With ``ima_noise`` (an ``ima.IMAKernelNoise``), the Fig. 7 conversion
+    error is injected through the *same* counter-PRNG function the kernel
+    calls (``ctrprng.noisy_ima_codes``) keyed on ``(seed, step, row, col)``
+    — the noisy oracle, bitwise-equal to the noisy kernel.  ``noise=None``
+    selects the in-kernel SNL stream (``counter_snl_noise`` at ``snl_amp``)
+    instead of a pre-drawn tensor; noisy mode requires 2-D operands (rows
+    are counter words).
     """
     # in_lo/in_hi are only consumed by the noise model, not by
-    # convert/reconstruct/select — keep the oracle jit-friendly.
+    # convert/reconstruct/select — keep the oracle jit-friendly.  (The
+    # counter noise model carries its own range inside ``ima_noise``.)
     cb = ima_lib.RampCodebook(
         levels=jnp.asarray(levels, jnp.float32),
         boundaries=jnp.asarray(boundaries, jnp.float32),
         in_lo=0.0, in_hi=0.0)
+    if ima_noise is not None:
+        assert mac.ndim == 2, "noisy oracle needs (rows, cols) operands"
     if mode == "kwn":
         codes = ima_lib.ima_convert(mac, cb)
-        res = kwn_lib.kwn_select(mac, k, cb)
+        if ima_noise is not None:
+            rows, cols = _noise_ids(mac.shape)
+            codes = ctrprng.noisy_ima_codes(codes, mac, rows, cols, seed,
+                                            step, ima_noise, cb.n_codes)
+            # Selection, early stop, and drive all read the *noisy* code —
+            # rank on its reconstruction (convert∘reconstruct is identity
+            # on codes, so kwn_select sees exactly the noisy ramp order).
+            mac_rank = ima_lib.ima_reconstruct(codes, cb)
+        else:
+            mac_rank = mac
+        res = kwn_lib.kwn_select(mac_rank, k, cb)
         mask, steps = res.mask, res.adc_steps[..., None]
         recon = ima_lib.ima_reconstruct(codes, cb)
         drive = recon * scale * mask * drive_gain
     elif mode == "nld":
         n_branches, n = w_dend.shape
         mac_f = mac * scale
-        act = ima_lib.ima_quantize(mac_f, cb)
+        codes = ima_lib.ima_convert(mac_f, cb)
+        if ima_noise is not None:
+            rows, cols = _noise_ids(mac_f.shape)
+            codes = ctrprng.noisy_ima_codes(codes, mac_f, rows, cols, seed,
+                                            step, ima_noise, cb.n_codes)
+        act = ima_lib.ima_reconstruct(codes, cb)
         act3 = act.reshape(act.shape[:-1] + (n_branches, n))
         drive = jnp.sum(act3 * w_dend, axis=-2) * drive_gain
         mask = jnp.ones(v.shape, jnp.float32)
@@ -82,26 +129,35 @@ def fused_head_ref(mac, boundaries, levels, scale, v, noise,
         use_snl = False
     else:
         raise ValueError(f"unknown mode {mode!r}")
+    if noise is None:
+        if use_snl and snl_amp != 0.0:
+            noise = counter_snl_noise(v.shape, seed, step, snl_amp)
+        else:
+            noise = jnp.zeros(v.shape, jnp.float32)
     v_out, spikes = lif_step_ref(v, drive, mask, noise, beta=beta,
                                  v_th1=v_th1, v_th2=v_th2, v_reset=v_reset,
                                  v_lim=v_lim, use_snl=use_snl)
     return v_out, spikes, mask, steps
 
 
-def fused_macro_step_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
-                         w_dend=None, *, mode: str = "kwn", k: int = 12,
-                         ratio: float = 2.0, drive_gain: float = 1.0,
-                         beta: float = 0.9, v_th1: float = 1.0,
-                         v_th2: float = 0.6, v_reset: float = 0.0,
-                         v_lim: float = 8.0, use_snl: bool = True):
+def fused_macro_step_ref(x, msb, lsb, boundaries, levels, scale, v,
+                         noise=None, w_dend=None, *, mode: str = "kwn",
+                         k: int = 12, ratio: float = 2.0,
+                         drive_gain: float = 1.0, beta: float = 0.9,
+                         v_th1: float = 1.0, v_th2: float = 0.6,
+                         v_reset: float = 0.0, v_lim: float = 8.0,
+                         use_snl: bool = True, ima_noise=None,
+                         snl_amp: float = 0.0, seed=0, step=0):
     """Composed jnp oracle for the fused macro step (kernels/fused_macro.py).
 
-    Same stage sequence — twin-cell MAC, IMA ramp conversion, mode head
-    (KWN descending-ramp top-K / NLD branch activation + soma combine),
-    LIF update — expressed through the core-library semantics, with every
+    Same stage sequence — twin-cell MAC, IMA ramp conversion (optionally
+    through the counter-PRNG Fig. 7 error model), mode head (KWN
+    descending-ramp top-K / NLD branch activation + soma combine), LIF
+    update — expressed through the core-library semantics, with every
     arithmetic step mirrored so the fused kernel matches *bitwise* at f32:
-    the MAC partials are small integers (exact in f32, associativity-free)
-    and the head is compare/select/LUT arithmetic.
+    the MAC partials are small integers (exact in f32, associativity-free),
+    the head is compare/select/LUT arithmetic, and the noise draws come
+    from the identical ``ctrprng`` counter functions.
 
     Returns (mac, v_out, spikes, mask, adc_steps) like the kernel, with
     adc_steps shaped (..., 1).
@@ -110,7 +166,8 @@ def fused_macro_step_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
     v_out, spikes, mask, steps = fused_head_ref(
         mac, boundaries, levels, scale, v, noise, w_dend, mode=mode, k=k,
         drive_gain=drive_gain, beta=beta, v_th1=v_th1, v_th2=v_th2,
-        v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
+        v_reset=v_reset, v_lim=v_lim, use_snl=use_snl, ima_noise=ima_noise,
+        snl_amp=snl_amp, seed=seed, step=step)
     return mac, v_out, spikes, mask, steps
 
 
@@ -138,48 +195,60 @@ def tiled_ternary_mac_ref(x, msb, lsb, ratio: float = 2.0, *,
     return jnp.concatenate(cols, axis=-1)
 
 
-def fused_macro_tiled_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
-                          w_dend=None, *, bk: int = 256, bn: int = 128,
-                          mode: str = "kwn", k: int = 12, ratio: float = 2.0,
-                          drive_gain: float = 1.0, beta: float = 0.9,
-                          v_th1: float = 1.0, v_th2: float = 0.6,
-                          v_reset: float = 0.0, v_lim: float = 8.0,
-                          use_snl: bool = True):
+def fused_macro_tiled_ref(x, msb, lsb, boundaries, levels, scale, v,
+                          noise=None, w_dend=None, *, bk: int = 256,
+                          bn: int = 128, mode: str = "kwn", k: int = 12,
+                          ratio: float = 2.0, drive_gain: float = 1.0,
+                          beta: float = 0.9, v_th1: float = 1.0,
+                          v_th2: float = 0.6, v_reset: float = 0.0,
+                          v_lim: float = 8.0, use_snl: bool = True,
+                          ima_noise=None, snl_amp: float = 0.0, seed=0,
+                          step=0):
     """Tiled oracle: ``tiled_ternary_mac_ref`` + the shared fused head.
 
     Must equal ``fused_macro_step_ref`` bitwise for any (bk, bn) — the
-    property suite sweeps tilings against it.
+    property suite sweeps tilings against it.  The noise streams are
+    counter-indexed on global element coordinates, so they are tiling
+    oblivious by construction (same kwargs as the step oracle).
     """
     mac = tiled_ternary_mac_ref(x, msb, lsb, ratio=ratio, bk=bk, bn=bn)
     v_out, spikes, mask, steps = fused_head_ref(
         mac, boundaries, levels, scale, v, noise, w_dend, mode=mode, k=k,
         drive_gain=drive_gain, beta=beta, v_th1=v_th1, v_th2=v_th2,
-        v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
+        v_reset=v_reset, v_lim=v_lim, use_snl=use_snl, ima_noise=ima_noise,
+        snl_amp=snl_amp, seed=seed, step=step)
     return mac, v_out, spikes, mask, steps
 
 
-def fused_macro_seq_ref(x, msb, lsb, boundaries, levels, scale, v, noise,
-                        w_dend=None, *, mode: str = "kwn", k: int = 12,
-                        ratio: float = 2.0, drive_gain: float = 1.0,
-                        beta: float = 0.9, v_th1: float = 1.0,
-                        v_th2: float = 0.6, v_reset: float = 0.0,
-                        v_lim: float = 8.0, use_snl: bool = True):
+def fused_macro_seq_ref(x, msb, lsb, boundaries, levels, scale, v,
+                        noise=None, w_dend=None, *, mode: str = "kwn",
+                        k: int = 12, ratio: float = 2.0,
+                        drive_gain: float = 1.0, beta: float = 0.9,
+                        v_th1: float = 1.0, v_th2: float = 0.6,
+                        v_reset: float = 0.0, v_lim: float = 8.0,
+                        use_snl: bool = True, ima_noise=None,
+                        snl_amp: float = 0.0, seed=0, step_offset=0):
     """Time-major oracle: left-fold of ``fused_macro_step_ref`` over T.
 
     x (T, ..., K) time-major, v (..., N) initial membrane, noise
-    (T, ..., N) pre-drawn per-step noise.  Returns per-step stacks
-    (mac (T, ..., NC), spikes, mask, adc_steps (T, ..., 1)) plus the final
-    membrane (..., N) — exactly the contract of the time-major kernel.
+    (T, ..., N) pre-drawn per-step noise — or None for the counter-based
+    in-kernel streams (IMA conversion error via ``ima_noise``, SNL sign
+    noise at ``snl_amp``), in which case the per-step counter word is
+    ``step_offset + t``.  Returns per-step stacks (mac (T, ..., NC),
+    spikes, mask, adc_steps (T, ..., 1)) plus the final membrane (..., N)
+    — exactly the contract of the time-major kernel.
     """
     def step(v_carry, inp):
-        xt, nt = inp
+        t, xt, nt = inp[0], inp[1], (inp[2] if noise is not None else None)
         mac, v_out, spikes, mask, steps = fused_macro_step_ref(
             xt, msb, lsb, boundaries, levels, scale, v_carry, nt, w_dend,
             mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
             v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-            use_snl=use_snl)
+            use_snl=use_snl, ima_noise=ima_noise, snl_amp=snl_amp,
+            seed=seed, step=step_offset + t)
         return v_out, (mac, spikes, mask, steps)
 
-    v_fin, (mac_t, spk_t, mask_t, steps_t) = jax.lax.scan(
-        step, v, (x, noise))
+    t_ix = jnp.arange(x.shape[0], dtype=jnp.int32)
+    xs = (t_ix, x) if noise is None else (t_ix, x, noise)
+    v_fin, (mac_t, spk_t, mask_t, steps_t) = jax.lax.scan(step, v, xs)
     return mac_t, v_fin, spk_t, mask_t, steps_t

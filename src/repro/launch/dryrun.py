@@ -21,7 +21,7 @@ import traceback
 import jax
 import jax.numpy as jnp
 
-from repro.configs import ARCHS, SHAPE_SKIPS, cells, get_config
+from repro.configs import SHAPE_SKIPS, cells, get_config
 from repro.dist import sharding
 from repro.launch.mesh import make_production_mesh
 from repro.models import lm

@@ -21,10 +21,7 @@ artifact's memory/HLO-collective cross-checks.
 import argparse
 import dataclasses
 import json
-import time
 
-import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.launch import dryrun
@@ -127,7 +124,6 @@ def run_cell(cell: str, compile_variants: bool = True):
             old = configs_mod.ARCHS[arch]
             configs_mod.ARCHS[arch] = cfg
             try:
-                t0 = time.time()
                 res = dryrun.lower_cell(arch, shape, multi_pod=False)
                 entry["compiled"] = {
                     "compile_s": res.get("compile_s"),

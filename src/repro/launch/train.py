@@ -16,13 +16,11 @@ Features exercised end-to-end (and by tests/test_fault_tolerance.py):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs import get_config
 from repro.configs.base import reduced

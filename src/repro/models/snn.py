@@ -104,8 +104,6 @@ def forward_train(p, events, cfg: SNNConfig):
     Training uses dense LIF updates (top-K masking is applied at inference;
     training with the dense objective + QAT is how the silicon was trained)."""
     b = events.shape[0]
-    lif_p = lif_lib.LIFParams(beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
-                              noise_amp=0.0)
 
     def step(carry, ev):
         v, spk_acc = carry
@@ -146,9 +144,18 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
     All fused variants are bitwise-equal to the composed path at f32 in KWN
     mode; in NLD mode they additionally quantize the branch weights onto
     the twin-cell grid (the silicon storage format), so accuracies can
-    differ slightly from the float-weight composed path.  The IMA noise
-    model needs per-step Gaussian draws, so ``noise`` forces the composed
-    path.
+    differ slightly from the float-weight composed path.
+
+    With ``noise`` (the Fig. 7 ``IMANoiseModel``), the fused paths stay
+    fused: the per-step per-column conversion-error draws — and the SNL
+    sign noise — are generated *inside* the kernel by the counter PRNG,
+    keyed on a seed derived from ``key``, with no pre-drawn noise tensor
+    and no composed-path fallback.  Noisy ``"step"`` and ``"seq"`` draw the
+    identical stream (the scan index is the counter's step word), and both
+    are bitwise-equal to ``kernels.ref.fused_macro_seq_ref`` with the same
+    parameters.  The noisy *composed* path keeps its historical
+    ``jax.random``/PRBS draws, so noisy composed and noisy fused are
+    statistically — not bitwise — equivalent.
 
     Returns (logits, telemetry) where telemetry carries adc_steps per time
     step (early-stop latency), LIF update counts, and SOP counts for the
@@ -159,7 +166,6 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
     use_snl = cfg.use_snl if use_snl is None else use_snl
     if fused is True:
         fused = "seq"
-    fused = fused if noise is None else False
     b = events.shape[0]
     mcfg = macro_lib.CIMMacroConfig(
         code_bits=cfg.code_bits,
@@ -169,10 +175,10 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
                               noise_amp=cfg.noise_amp if use_snl else 0.0)
     if fused == "seq":
         return _forward_silicon_fused_seq(p, events, cfg, mode, k, use_snl,
-                                          mcfg, lif_p)
+                                          mcfg, lif_p, key)
     if fused == "step":
         return _forward_silicon_fused(p, events, cfg, mode, k, use_snl, mcfg,
-                                      lif_p)
+                                      lif_p, key)
     if fused is not False:
         raise ValueError(f"unknown fused={fused!r}; expected False, True, "
                          f"'step', or 'seq'")
@@ -233,22 +239,37 @@ def _pack_fused(p, cfg: SNNConfig, mode: str, mcfg):
                                       activation=cfg.activation)
 
 
-def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
-                           use_snl: bool, mcfg, lif_p):
-    """Per-step fused inference scan body (noise-free silicon path).
+def _noise_seed(key: jax.Array) -> jax.Array:
+    """Counter-PRNG seed word derived from the caller's JAX key."""
+    return jax.random.randint(key, (), 0, jnp.iinfo(jnp.int32).max,
+                              dtype=jnp.int32)
 
-    Mirrors the composed ``forward_silicon`` step exactly: same PRBS state
-    threading, same telemetry, one fused Pallas kernel per time step.  Kept
-    for launch-overhead benchmarking; the serving default is the time-major
-    ``_forward_silicon_fused_seq``.
+
+def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
+                           use_snl: bool, mcfg, lif_p, key):
+    """Per-step fused inference scan body.
+
+    Mirrors the composed ``forward_silicon`` step exactly in the clean case
+    (same PRBS state threading, same telemetry), one fused Pallas kernel
+    per time step.  With ``mcfg.ima_noise`` the per-step launches pass the
+    scan index as the counter step word, so the stream — and therefore
+    every spike — is bitwise-identical to the one-launch ``seq`` path.
+    Kept for launch-overhead benchmarking; the serving default is the
+    time-major ``_forward_silicon_fused_seq``.
     """
     b = events.shape[0]
     fw = _pack_fused(p, cfg, mode, mcfg)
     snl_active = use_snl and mode == "kwn"
+    noisy = mcfg.ima_noise is not None
+    ima_kn = macro_lib.fused_kernel_noise(fw, mcfg)
+    seed = _noise_seed(key) if noisy else jnp.int32(0)
 
-    def step(carry, ev):
+    def step(carry, inp):
         v, prbs_state, spk_acc, tele = carry
-        if snl_active:
+        ev, t = inp
+        if noisy:
+            nz = None           # SNL noise comes from the in-kernel counter
+        elif snl_active:
             prbs_state, nz = prbs_lib.prbs_noise(prbs_state, v.shape,
                                                  lif_p.noise_amp)
         else:
@@ -257,7 +278,9 @@ def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
             ev, fw, v, nz, k=k, drive_gain=cfg.drive_gain, beta=cfg.beta,
             v_th1=cfg.v_th1, v_th2=cfg.v_th2, v_reset=lif_p.v_reset,
             v_lim=lif_lib.vmem_limit(lif_p.vmem_bits),
-            use_snl=snl_active)
+            use_snl=snl_active, ima_noise=ima_kn,
+            snl_amp=lif_p.noise_amp if (noisy and snl_active) else 0.0,
+            seed=seed, step_offset=t)
         n_upd = float(k if mode == "kwn" else cfg.n_hidden)
         tele = {
             "adc_steps": tele["adc_steps"] + steps.astype(jnp.float32),
@@ -270,31 +293,41 @@ def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
              "sops": jnp.zeros((b,))}
     st0 = lif_lib.lif_init((b, cfg.n_hidden))
     init = (st0.v_mem, st0.prbs_state, jnp.zeros((b, cfg.n_hidden)), tele0)
-    (_, _, counts, tele), _ = jax.lax.scan(step, init,
-                                           jnp.moveaxis(events, 1, 0))
+    (_, _, counts, tele), _ = jax.lax.scan(
+        step, init, (jnp.moveaxis(events, 1, 0),
+                     jnp.arange(events.shape[1], dtype=jnp.int32)))
     logits = (counts / cfg.n_steps) @ p["w_out"]
     tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)
     return logits, tele
 
 
 def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
-                               use_snl: bool, mcfg, lif_p):
+                               use_snl: bool, mcfg, lif_p, key):
     """Time-major fused inference: the whole event sequence in one launch.
 
     The T axis is folded into the Pallas grid (``macro.fused_seq``), so the
     LIF membrane never leaves VMEM between steps and the weight planes are
     staged once per sequence instead of once per step — the serving
-    engine's dominant launch overhead.  PRBS noise is pre-drawn with the
-    exact LFSR sequence the per-step path threads through its scan, and the
-    per-step output stacks are left-folded in scan order, so logits and
-    telemetry stay bitwise-equal to the composed and per-step paths.
+    engine's dominant launch overhead.  In the clean case PRBS noise is
+    pre-drawn with the exact LFSR sequence the per-step path threads
+    through its scan, and the per-step output stacks are left-folded in
+    scan order, so logits and telemetry stay bitwise-equal to the composed
+    and per-step paths.  In the noisy case (``mcfg.ima_noise``) *nothing*
+    is pre-drawn: both the IMA conversion error and the SNL sign noise
+    come from the in-kernel counter PRNG, and the launch streams only the
+    events themselves.
     """
     b, t_steps = events.shape[0], events.shape[1]
     fw = _pack_fused(p, cfg, mode, mcfg)
     snl_active = use_snl and mode == "kwn"
+    noisy = mcfg.ima_noise is not None
+    ima_kn = macro_lib.fused_kernel_noise(fw, mcfg)
+    seed = _noise_seed(key) if noisy else jnp.int32(0)
     ev_t = jnp.moveaxis(events, 1, 0)                      # (T, B, N_in)
     st0 = lif_lib.lif_init((b, cfg.n_hidden))
-    if snl_active:
+    if noisy:
+        noise_t = None          # all noise is generated inside the kernel
+    elif snl_active:
         def draw(s, _):
             s, nz = prbs_lib.prbs_noise(s, (b, cfg.n_hidden), lif_p.noise_amp)
             return s, nz
@@ -306,7 +339,9 @@ def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
         beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
         v_reset=lif_p.v_reset,
         v_lim=lif_lib.vmem_limit(lif_p.vmem_bits),
-        use_snl=snl_active)
+        use_snl=snl_active, ima_noise=ima_kn,
+        snl_amp=lif_p.noise_amp if (noisy and snl_active) else 0.0,
+        seed=seed)
     n_upd = float(k if mode == "kwn" else cfg.n_hidden)
     sops_t = jnp.sum(jnp.abs(ev_t), axis=-1) * cfg.n_hidden   # (T, B)
 

@@ -22,7 +22,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.nn import layers
-from repro.nn.module import ParamSpec
 
 NEG_INF = -1e30
 

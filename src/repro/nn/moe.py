@@ -22,7 +22,6 @@ up to capacity drops (a2a path with cf < inf).
 
 from __future__ import annotations
 
-import functools
 import math
 
 import jax
@@ -229,11 +228,7 @@ def moe_2d(p: dict, x: jax.Array, *, k: int, mesh: Mesh,
     b, s, d = x.shape
     n_experts = p["w_in"].shape[0]
     eaxes = tuple(a for a in expert_axes if a in mesh.shape)
-    n_rows = 1
-    for a in eaxes:
-        n_rows *= mesh.shape[a]
     tp = mesh.shape[tp_axis]
-    e_loc = n_experts // n_rows
     seq_ok = s % tp == 0
 
     def local_fn(router, w_in, w_gate, w_out, xl):

@@ -35,7 +35,6 @@ NEG_INF = -1e30
 # ===========================================================================
 
 def mlstm_specs(d_model: int, n_heads: int, dtype=jnp.float32) -> dict:
-    hd = d_model // n_heads
     return {
         "wq": layers.linear_spec(d_model, d_model, "embed", "heads", dtype=dtype),
         "wk": layers.linear_spec(d_model, d_model, "embed", "heads", dtype=dtype),

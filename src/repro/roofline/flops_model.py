@@ -15,7 +15,6 @@ change to a term.
 from __future__ import annotations
 
 import dataclasses
-import math
 from typing import Any
 
 from repro.models import lm

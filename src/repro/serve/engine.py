@@ -10,7 +10,7 @@ token against a KV cache of the cell's sequence length.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable
+from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -75,21 +75,30 @@ class SNNEventEngine:
     one 256x128 macro are tiled inside the kernel either way.  Requests are
     padded to fixed ``batch_slots`` (dummy rows are all-zero event streams)
     so the jit cache holds exactly one entry.
+
+    ``noise`` (an ``ima.IMANoiseModel``) serves through the *noisy* silicon
+    model — the Fig. 7 conversion-error draws are generated inside the
+    fused kernel by the counter PRNG, so noisy serving keeps the exact same
+    one-launch-per-batch cost profile as clean serving (no pre-drawn noise
+    tensors, no composed fallback), while every batch still gets fresh,
+    reproducible draws from the engine's key stream.
     """
 
     def __init__(self, cfg: snn_lib.SNNConfig, params, batch_slots: int = 64,
-                 seed: int = 0, time_major: bool = True):
+                 seed: int = 0, time_major: bool = True, noise=None):
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
         self.time_major = time_major
+        self.noise = noise
         self.pending: list[EventRequest] = []
         self.completed: list[EventRequest] = []
         self._key = jax.random.PRNGKey(seed)
         fused = "seq" if time_major else "step"
         self._fwd = jax.jit(
             lambda p, ev, key: snn_lib.forward_silicon(p, ev, cfg, key,
-                                                       fused=fused))
+                                                       fused=fused,
+                                                       noise=noise))
 
     def submit(self, req: EventRequest):
         self.pending.append(req)

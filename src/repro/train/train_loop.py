@@ -10,7 +10,6 @@ ready for jax.jit with the shardings from dist/sharding.py.
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax

@@ -39,6 +39,10 @@ FAST_MODULES = {
     # the fused-kernel tiling/time-major invariance checks), roofline.
     # Full composed-kernel parity (test_kernels, test_fused_macro*) lives
     # in the default tier — it's worth real minutes, not smoke seconds.
+    # test_ima_noise.py curates its own smoke subset with explicit
+    # ``@pytest.mark.fast`` markers (one noisy-parity shape, seeded
+    # determinism, the Fig. 7a moments golden) so the tier stays <60 s;
+    # its wide moment sweep is marked ``slow``.
     "test_core.py",
     "test_golden_regression.py",
     "test_roofline.py",

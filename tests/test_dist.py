@@ -21,7 +21,6 @@ import textwrap
 
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro.nn import module
 

@@ -12,7 +12,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.train import checkpoint, compression, optim
+from repro.train import checkpoint, compression
 
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 

@@ -316,14 +316,25 @@ class TestForwardSiliconFused:
         np.testing.assert_allclose(np.asarray(tele["adc_steps"]), 31.0)
         np.testing.assert_allclose(np.asarray(tele["lif_updates"]), 128.0)
 
-    def test_noise_model_falls_back_to_composed(self):
+    def test_noise_model_stays_fused(self):
+        """noise=IMANoiseModel() no longer forces the composed path: the
+        noisy step and seq cadences draw the identical in-kernel counter
+        stream (bitwise-equal logits), and the draws actually perturb the
+        clean result.  Full noisy-oracle parity: tests/test_ima_noise.py."""
         snn, p, ev, cfg = self._setup("kwn")
         noisy = ima_lib.IMANoiseModel()
-        la, _ = snn.forward_silicon(p, ev, cfg, jax.random.PRNGKey(2),
-                                    noise=noisy)
-        lb, _ = snn.forward_silicon(p, ev, cfg, jax.random.PRNGKey(2),
-                                    noise=noisy, fused=True)
+        la, ta = snn.forward_silicon(p, ev, cfg, jax.random.PRNGKey(2),
+                                     noise=noisy, fused="step")
+        lb, tb = snn.forward_silicon(p, ev, cfg, jax.random.PRNGKey(2),
+                                     noise=noisy, fused="seq")
         np.testing.assert_array_equal(np.asarray(la), np.asarray(lb))
+        for name in ta:
+            np.testing.assert_array_equal(np.asarray(ta[name]),
+                                          np.asarray(tb[name]),
+                                          err_msg=f"telemetry {name}")
+        clean, _ = snn.forward_silicon(p, ev, cfg, jax.random.PRNGKey(2),
+                                       fused="seq")
+        assert not np.array_equal(np.asarray(lb), np.asarray(clean))
 
 
 class TestSNNEventEngine:

@@ -24,7 +24,7 @@ import pytest
 
 from repro.core import ima as ima_lib
 from repro.kernels import ops, ref
-from tests._hypothesis_compat import HAVE_HYPOTHESIS, given, settings, st
+from tests._hypothesis_compat import given, settings, st
 
 
 def _tern(key, shape, rate=0.25):

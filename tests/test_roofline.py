@@ -1,8 +1,6 @@
 """Roofline machinery tests: HLO collective parser (shapes, wire factors,
 while-loop trip attribution) and flops-model sanity across every cell."""
 
-import jax
-import jax.numpy as jnp
 import pytest
 
 from repro.roofline import analysis, flops_model

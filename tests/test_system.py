@@ -11,7 +11,6 @@ import pytest
 
 from repro.configs import ARCHS
 from repro.configs.base import reduced
-from repro.core import ima
 from repro.data import events as ev_lib
 from repro.data.synthetic_lm import DataConfig, SyntheticLM
 from repro.models import lm, snn

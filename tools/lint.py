@@ -1,0 +1,120 @@
+#!/usr/bin/env python
+"""Stdlib fallback linter: the floor `make lint` enforces everywhere.
+
+The CI image installs ruff (see ruff.toml for the real rule set); this
+container does not, and the no-new-deps rule forbids installing it.  This
+script keeps the lint gate meaningful in both worlds with zero
+dependencies: it parses every file with ``ast`` and reports
+
+  * syntax errors (anything that does not parse),
+  * unused imports (the F401 class — by far the most common rot in a
+    fast-growing repo), honouring ``# noqa`` on the import line,
+  * tabs in indentation and trailing whitespace (formatting drift that
+    ruff's E/W rules would flag).
+
+Exit status is non-zero on any finding, so `make lint` fails the same way
+locally and in CI.
+"""
+
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+
+def _iter_py_files(paths: list[str]):
+    for p in paths:
+        path = Path(p)
+        if path.is_file() and path.suffix == ".py":
+            yield path
+        elif path.is_dir():
+            yield from sorted(path.rglob("*.py"))
+
+
+def _used_names(tree: ast.AST) -> set[str]:
+    used: set[str] = set()
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Name):
+            used.add(node.id)
+        elif isinstance(node, ast.Attribute):
+            # the root of a dotted use: pkg.mod.attr -> pkg
+            inner = node.value
+            while isinstance(inner, ast.Attribute):
+                inner = inner.value
+            if isinstance(inner, ast.Name):
+                used.add(inner.id)
+    return used
+
+
+def _import_findings(tree: ast.AST, lines: list[str],
+                     is_init: bool) -> list[tuple[int, str]]:
+    if is_init:
+        return []       # __init__ re-exports are intentional
+    used = _used_names(tree)
+    # names exported via __all__ count as used (and nothing else: a
+    # docstring mentioning a module's name must not launder its import)
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__all__"
+                for t in node.targets):
+            for el in ast.walk(node.value):
+                if isinstance(el, ast.Constant) and isinstance(el.value, str):
+                    used.add(el.value)
+    out = []
+    for node in ast.walk(tree):
+        if not isinstance(node, (ast.Import, ast.ImportFrom)):
+            continue
+        line = lines[node.lineno - 1] if node.lineno <= len(lines) else ""
+        if "noqa" in line:
+            continue
+        if isinstance(node, ast.ImportFrom) and node.module == "__future__":
+            continue
+        for alias in node.names:
+            if alias.name == "*":
+                continue
+            bound = alias.asname or alias.name.split(".")[0]
+            if bound not in used:
+                out.append((node.lineno, f"unused import '{bound}' (F401)"))
+    return out
+
+
+def _whitespace_findings(lines: list[str]) -> list[tuple[int, str]]:
+    out = []
+    for i, line in enumerate(lines, 1):
+        body = line.rstrip("\n")
+        if body != body.rstrip():
+            out.append((i, "trailing whitespace (W291)"))
+        stripped = body.lstrip(" ")
+        if stripped.startswith("\t"):
+            out.append((i, "tab in indentation (W191)"))
+    return out
+
+
+def lint_file(path: Path) -> list[str]:
+    src = path.read_text()
+    lines = src.splitlines()
+    try:
+        tree = ast.parse(src, filename=str(path))
+    except SyntaxError as e:
+        return [f"{path}:{e.lineno}: syntax error: {e.msg} (E999)"]
+    findings = _import_findings(tree, lines, path.name == "__init__.py")
+    findings += _whitespace_findings(lines)
+    return [f"{path}:{ln}: {msg}" for ln, msg in sorted(findings)]
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or ["src", "tests", "benchmarks", "examples", "tools"]
+    problems: list[str] = []
+    n_files = 0
+    for f in _iter_py_files(paths):
+        n_files += 1
+        problems += lint_file(f)
+    for p in problems:
+        print(p)
+    print(f"fallback lint: {n_files} files, {len(problems)} finding(s)")
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
