@@ -4,14 +4,17 @@
 # subprocesses and training loops).  `make lint` runs ruff when installed
 # plus the stdlib fallback linter (tools/lint.py) always, so the gate works
 # in the minimal container too.  `make bench` runs the fused-macro
-# benchmark and writes the machine-readable perf-trajectory records CI
-# uploads per PR.
+# benchmark — including the activity-gating density sweep — writes the
+# machine-readable perf-trajectory records CI uploads per PR, and
+# validates their schema.  `make bench-check` additionally gates clean-path
+# regressions against the committed BENCH_fused_macro.json (>20 %
+# normalized median fails; see tools/check_bench.py).
 
 PYTHONPATH_SRC := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST := $(PYTHONPATH_SRC) python -m pytest
 LINT_PATHS := src tests benchmarks examples tools
 
-.PHONY: smoke test lint bench
+.PHONY: smoke test lint bench bench-check
 
 smoke:
 	$(PYTEST) -q -m "fast and not slow"
@@ -30,3 +33,10 @@ lint:
 bench:
 	$(PYTHONPATH_SRC) python benchmarks/bench_fused_macro.py \
 		--out BENCH_fused_macro.json
+	python tools/check_bench.py BENCH_fused_macro.json
+
+bench-check:
+	@cp BENCH_fused_macro.json /tmp/bench_baseline.json
+	$(MAKE) bench
+	python tools/check_bench.py BENCH_fused_macro.json \
+		--baseline /tmp/bench_baseline.json

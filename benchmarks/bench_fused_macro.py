@@ -20,6 +20,17 @@
    clean launch — the cost of noise-faithful serving — with a bitwise
    parity check against the counter-based ``ref.py`` noisy oracle and the
    KWN early-stop histogram under noise next to the clean one.
+5. **density sweep**: activity-gated vs dense execution at 1 %, 5 %, 10 %,
+   25 %, 50 % and fully dense event rates, on both the single-step and the
+   time-major sequence shapes.  The *dense* side is the pre-sparsity
+   pipeline exactly (``gate=False``, raw-MAC telemetry on); the *gated*
+   side is the serving default (occupancy-gated MAC, bounded KWN sweep,
+   telemetry off).  Sequence events follow a bursty DVS-like model (a
+   density-d stream is silent steps + active steps at ~20 % in-burst
+   rate — the temporal structure real event cameras produce and the
+   activity planner exploits); single-step events are uniform.  Gated
+   outputs are parity-checked against the ``ref.py`` oracles at every
+   density, and each entry reports the measured skipped-block ratio.
 
 Also emits the measured KWN early-stop step statistics (histogram + mean) the
 energy model consumes — the fused kernel reports them per row, so the energy
@@ -27,8 +38,9 @@ figures below come from *measured* ramp activity, not the analytic fit.
 
 Run as a script to print the full report; ``--out PATH`` additionally
 writes the machine-readable trajectory records (fixed schema: op, shape,
-mode, median_ms, speedup) that ``make bench`` / CI track per PR as
-``BENCH_fused_macro.json``.
+mode, median_ms, speedup, density) that ``make bench`` / CI track per PR as
+``BENCH_fused_macro.json`` (``tools/check_bench.py`` validates the schema
+and gates clean-path regressions).
 """
 
 from __future__ import annotations
@@ -53,6 +65,9 @@ SPIKE_RATE = 0.05   # event-stream duty cycle: MACs land inside the ramp range
 
 T_SEQ = 32                       # sequence sweep length
 LARGE_N_IN, LARGE_N_OUT = 512, 256   # 2x2 virtual macro grid
+
+DENSITIES = (0.01, 0.05, 0.10, 0.25, 0.50, 1.0)
+IN_BURST_DENSITY = 0.2   # per-element rate inside an active (burst) step
 
 
 def _operands(key, m=M, n_in=N_IN, n_out=N_OUT, t=None):
@@ -219,6 +234,107 @@ def _noisy_variants(t=T_SEQ, m=M, n_in=N_IN, n_out=N_OUT):
     }
 
 
+def _event_stream(key, density, shape):
+    """Density-d ternary events; bursty (DVS-like) when time-major.
+
+    A (T, M, K) stream at density < IN_BURST_DENSITY is modelled as silent
+    steps plus active steps firing at the in-burst rate (saccade/gesture
+    streams are temporally clustered, which is exactly the structure the
+    per-(step, row-tile, K-tile) activity planner converts into skipped
+    blocks); at or above the in-burst rate every step is active with
+    uniform per-element density.  2-D (single-step) shapes are uniform —
+    one step has no temporal structure to exploit.
+    """
+    k_val, k_el, k_step = jax.random.split(key, 3)
+    tern = jax.random.randint(k_val, shape, -1, 2).astype(jnp.int8)
+    if len(shape) == 3 and density < IN_BURST_DENSITY:
+        active = jax.random.uniform(k_step, (shape[0], 1, 1)) \
+            < (density / IN_BURST_DENSITY)
+        sparse = (jax.random.uniform(k_el, shape) < IN_BURST_DENSITY) & active
+    else:
+        sparse = jax.random.uniform(k_el, shape) < density
+    return (tern * sparse).astype(jnp.int8)
+
+
+def _density_sweep(t=T_SEQ, m=M, n_in=N_IN, n_out=N_OUT):
+    """Activity-gated vs dense fused execution across event densities.
+
+    The dense side is the pre-sparsity hot path verbatim (``gate=False``,
+    raw-MAC telemetry on); the gated side is the serving default
+    (``gate=True``, telemetry off).  Gated (v_mem, spikes, mask,
+    adc_steps) are checked equal to the jitted ``ref.py`` seq oracle at
+    every density — gating is a pure execution optimization, so any
+    mismatch is a bug, not a tolerance.
+    """
+    keys = jax.random.split(jax.random.PRNGKey(5), 6)
+    tern = lambda k, s: jax.random.randint(k, s, -1, 2).astype(jnp.int8)
+    msb, lsb = tern(keys[0], (n_in, n_out)), tern(keys[1], (n_in, n_out))
+    cb = ima_lib.nlq_codebook(CODE_BITS, -24, 24)
+    scale = jax.random.uniform(keys[2], (n_out,), minval=0.05, maxval=0.3)
+    v = jax.random.normal(keys[3], (m, n_out)) * 0.5
+    kw = dict(mode="kwn", k=K_WIN, drive_gain=DRIVE_GAIN)
+
+    # v rides as an argument everywhere (never a jit-closure constant):
+    # XLA constant-folds closed-over f32 operands with different
+    # contraction than runtime ops, which breaks bitwise oracle parity.
+    @functools.partial(jax.jit, static_argnames=("gate",))
+    def run_seq(x, v, gate):
+        return ops.fused_macro_seq(
+            x, msb, lsb, cb.boundaries, cb.levels, scale, v, None,
+            gate=gate, mac_telemetry=not gate, **kw)[1:]
+
+    @functools.partial(jax.jit, static_argnames=("gate",))
+    def run_step(x, v, gate):
+        return ops.fused_macro_step(
+            x, msb, lsb, cb.boundaries, cb.levels, scale, v, None,
+            gate=gate, mac_telemetry=not gate, **kw)[1:]
+
+    oracle_seq = jax.jit(functools.partial(ref.fused_macro_seq_ref, **kw))
+    oracle_step = jax.jit(functools.partial(ref.fused_macro_step_ref, **kw))
+
+    def entry(x, runner, oracle, iters):
+        from repro.kernels import fused_macro as fused_kernel
+        ms_dense = _time(lambda x: runner(x, v, gate=False), (x,),
+                         iters=iters) / 1e3
+        ms_gated = _time(lambda x: runner(x, v, gate=True), (x,),
+                         iters=iters) / 1e3
+        got = runner(x, v, gate=True)
+        want = oracle(x, msb, lsb, cb.boundaries, cb.levels, scale, v, None)
+        want = (want[1], want[2], want[3], want[4][..., 0])
+        parity = bool(all(jnp.array_equal(a, b)
+                          for a, b in zip(got, want)))
+        xs = x if x.ndim == 3 else x[None]
+        plan = fused_kernel.plan_tiles(m, n_in, n_out, n_out, xs.shape[0])
+        occ = ops.fused_activity_map(
+            jnp.pad(xs, ((0, 0), (0, plan.m_pad - m),
+                         (0, plan.k_pad - n_in))), plan)
+        return {
+            "measured_density": round(float((x != 0).mean()), 4),
+            "skipped_block_ratio": round(1.0 - float(occ.mean()), 4),
+            "ms_dense": round(ms_dense, 2),
+            "ms_gated": round(ms_gated, 2),
+            "speedup": round(ms_dense / ms_gated, 2),
+            "parity_vs_oracle": parity,
+        }
+
+    seq_entries, step_entries = [], []
+    for i, d in enumerate(DENSITIES):
+        kd = jax.random.fold_in(keys[4], i)
+        x_seq = _event_stream(kd, d, (t, m, n_in))
+        seq_entries.append({"density": d,
+                            **entry(x_seq, run_seq, oracle_seq, iters=9)})
+        x_step = _event_stream(jax.random.fold_in(keys[5], i), d, (m, n_in))
+        step_entries.append({"density": d,
+                             **entry(x_step, run_step, oracle_step,
+                                     iters=15)})
+    return {
+        "geometry": f"{n_in}x{n_out}", "batch": m, "t": t,
+        "in_burst_density": IN_BURST_DENSITY,
+        "seq": seq_entries,
+        "step": step_entries,
+    }
+
+
 def _step_comparison(m, n_in, n_out, key):
     """Fused-vs-composed single step at a given layer geometry."""
     x, msb, lsb, cb, scale, v, noise = _operands(key, m=m, n_in=n_in,
@@ -253,6 +369,7 @@ def run() -> dict:
 
     seq_stats = _seq_variants()
     noisy_stats = _noisy_variants()
+    density_stats = _density_sweep()
 
     # Early-stop statistics the energy model consumes (measured, per row).
     steps = np.asarray(fused[3]).reshape(-1)
@@ -280,6 +397,7 @@ def run() -> dict:
         },
         "sequence": seq_stats,
         "noisy": noisy_stats,
+        "density_sweep": density_stats,
         "early_stop": {
             "mean_adc_steps": round(mean_steps, 2),
             "full_ramp_steps": full,
@@ -295,45 +413,66 @@ def records(report: dict) -> list[dict]:
     """Flatten the report into fixed-schema perf-trajectory records.
 
     Schema (every record, exactly these keys):
-      op        — what ran (fused_step / composed_step / ... / fused_seq_noisy)
+      op        — what ran (fused_step / composed_step / ... / fused_seq_gated)
       shape     — "BxIxN[xT]" geometry string
       mode      — "kwn" or "kwn+noise"
       median_ms — median wall time, milliseconds
       speedup   — vs the record's natural baseline (1.0 for baselines)
+      density   — configured |event| rate of the operand stream
 
     CI uploads this as ``BENCH_fused_macro.json`` per PR, so the perf
-    trajectory of the fused path is a diffable artifact, not a claim.
+    trajectory of the fused path is a diffable artifact, not a claim;
+    ``tools/check_bench.py`` validates the schema and fails clean-path
+    regressions against the committed copy.
     """
     g, b = report["geometry"], report["batch"]
     big, seq, noisy = (report["large_layer"], report["sequence"],
                        report["noisy"])
+    sweep = report["density_sweep"]
     shape = f"{b}x{g}"
     big_shape = f"{big['batch']}x{big['geometry']}"
     seq_shape = f"{seq['batch']}x{seq['geometry']}x{seq['t']}"
     noisy_shape = f"{noisy['batch']}x{noisy['geometry']}x{noisy['t']}"
+    sweep_step_shape = f"{sweep['batch']}x{sweep['geometry']}"
+    sweep_seq_shape = f"{sweep['batch']}x{sweep['geometry']}x{sweep['t']}"
     us = 1e-3
-    return [
+    out = [
         {"op": "composed_step", "shape": shape, "mode": "kwn",
-         "median_ms": round(report["us_composed"] * us, 3), "speedup": 1.0},
+         "median_ms": round(report["us_composed"] * us, 3), "speedup": 1.0,
+         "density": SPIKE_RATE},
         {"op": "fused_step", "shape": shape, "mode": "kwn",
          "median_ms": round(report["us_fused"] * us, 3),
-         "speedup": report["speedup"]},
+         "speedup": report["speedup"], "density": SPIKE_RATE},
         {"op": "composed_step", "shape": big_shape, "mode": "kwn",
-         "median_ms": round(big["us_composed"] * us, 3), "speedup": 1.0},
+         "median_ms": round(big["us_composed"] * us, 3), "speedup": 1.0,
+         "density": SPIKE_RATE},
         {"op": "fused_step_tiled", "shape": big_shape, "mode": "kwn",
          "median_ms": round(big["us_fused_tiled"] * us, 3),
-         "speedup": big["speedup"]},
+         "speedup": big["speedup"], "density": SPIKE_RATE},
         {"op": "fused_seq_per_step_scan", "shape": seq_shape, "mode": "kwn",
-         "median_ms": seq["ms_per_step_scan"], "speedup": 1.0},
+         "median_ms": seq["ms_per_step_scan"], "speedup": 1.0,
+         "density": SPIKE_RATE},
         {"op": "fused_seq_time_major", "shape": seq_shape, "mode": "kwn",
          "median_ms": seq["ms_time_major"],
-         "speedup": seq["speedup_vs_scan"]},
+         "speedup": seq["speedup_vs_scan"], "density": SPIKE_RATE},
         {"op": "fused_seq_time_major", "shape": noisy_shape, "mode": "kwn",
-         "median_ms": noisy["ms_clean"], "speedup": 1.0},
+         "median_ms": noisy["ms_clean"], "speedup": 1.0,
+         "density": SPIKE_RATE},
         {"op": "fused_seq_noisy", "shape": noisy_shape, "mode": "kwn+noise",
          "median_ms": noisy["ms_noisy"],
-         "speedup": round(1.0 / noisy["noise_overhead"], 2)},
+         "speedup": round(1.0 / noisy["noise_overhead"], 2),
+         "density": SPIKE_RATE},
     ]
+    for kind, kshape in (("seq", sweep_seq_shape), ("step",
+                                                    sweep_step_shape)):
+        for e in sweep[kind]:
+            out.append({"op": f"fused_{kind}_dense", "shape": kshape,
+                        "mode": "kwn", "median_ms": e["ms_dense"],
+                        "speedup": 1.0, "density": e["density"]})
+            out.append({"op": f"fused_{kind}_gated", "shape": kshape,
+                        "mode": "kwn", "median_ms": e["ms_gated"],
+                        "speedup": e["speedup"], "density": e["density"]})
+    return out
 
 
 def main(argv=None):

@@ -31,6 +31,15 @@ Two execution paths:
     noisy silicon evaluation no longer leaves the fused path.
     ``plan_fused_tiles`` exposes the tile planner (padding, grid, VMEM
     footprint, macro-invocation count for the energy model).
+
+    The fused path is also *activity-gated* by default: ``plan_activity``
+    computes the per-(step, row-tile, K-tile) occupancy map of an event
+    sequence (the host-side pass the KWN controller's row-activity logic
+    performs in silicon), and the kernel skips the plane decode + MXU
+    contraction for all-zero blocks and bounds the KWN ramp sweep to the
+    occupied code range — bit-identical outputs, event-proportional work.
+    Raw-MAC telemetry is opt-in on this path (``mac_telemetry``): serving
+    never pays the (T, ..., NC) HBM stack.
 """
 
 from __future__ import annotations
@@ -220,6 +229,28 @@ def plan_fused_tiles(batch: int, fw: FusedMacroWeights, n_out: int,
     return plan, geometry(n_in, nc)
 
 
+def plan_activity(spikes: jax.Array, fw: FusedMacroWeights,
+                  n_out: int) -> jax.Array:
+    """Occupancy map for a time-major event sequence: the activity plan.
+
+    spikes (T, ..., I) in {-1, 0, +1}; returns the
+    (T, row-tiles, K-tiles) int32 map (1 = the block holds at least one
+    event) matching the tile plan ``plan_fused_tiles`` would pick for this
+    launch — the same map ``fused_seq`` computes internally when none is
+    passed.  Built once per sequence; ``1 - map.mean()`` is the
+    skipped-block ratio the serving telemetry reports next to the KWN
+    early-stop statistics.
+    """
+    from repro.kernels import ops as kernel_ops
+    s = ternary_lib.ternary_input_encode(spikes)
+    t = s.shape[0]
+    xm = s.reshape(t, -1, s.shape[-1])
+    plan, _ = plan_fused_tiles(xm.shape[1], fw, n_out, n_steps=t)
+    xm = jnp.pad(xm, ((0, 0), (0, plan.m_pad - xm.shape[1]),
+                      (0, plan.k_pad - xm.shape[-1])))
+    return kernel_ops.fused_activity_map(xm, plan)
+
+
 def fused_kernel_noise(fw: FusedMacroWeights,
                        cfg: CIMMacroConfig) -> "ima_lib.IMAKernelNoise | None":
     """The kernel-consumable Fig. 7 noise struct for a packed weight set.
@@ -243,13 +274,16 @@ def fused_step(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
                v_th1: float = 1.0, v_th2: float = 0.6,
                v_reset: float = 0.0, v_lim: float = 8.0,
                use_snl: bool = True, ima_noise=None, snl_amp: float = 0.0,
+               gate: bool = True, mac_telemetry: bool = True,
                seed=0, step_offset=0):
     """One fused macro time step: spikes (..., I), v/noise (..., N).
 
     ``ima_noise`` (``ima.IMAKernelNoise``, see ``fused_kernel_noise``)
     enables the in-kernel Fig. 7 conversion-error model; with
     ``noise=None`` the SNL stream is generated in-kernel too (counter PRNG
-    at ``snl_amp``), keyed on ``(seed, step_offset)``.
+    at ``snl_amp``), keyed on ``(seed, step_offset)``.  ``gate`` /
+    ``mac_telemetry`` select activity-gated execution (default, output-
+    invariant) and the raw-MAC HBM stack (mac is None when off).
     Returns (v_out, spikes_out, mask, adc_steps, mac) — the LIF state update,
     the KWN winner mask (ones in NLD mode), the per-row early-stop ADC step
     count, and the raw integer-unit MAC for telemetry.
@@ -260,8 +294,8 @@ def fused_step(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
         s, fw.msb, fw.lsb, fw.boundaries, fw.levels, fw.scale, v, noise,
         fw.w_dend, mode=fw.mode, k=k, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-        use_snl=use_snl, ima_noise=ima_noise, snl_amp=snl_amp, seed=seed,
-        step_offset=step_offset)
+        use_snl=use_snl, ima_noise=ima_noise, snl_amp=snl_amp, gate=gate,
+        mac_telemetry=mac_telemetry, seed=seed, step_offset=step_offset)
     return v_out, spk, mask, steps, mac
 
 
@@ -271,7 +305,8 @@ def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
               v_th1: float = 1.0, v_th2: float = 0.6,
               v_reset: float = 0.0, v_lim: float = 8.0,
               use_snl: bool = True, ima_noise=None, snl_amp: float = 0.0,
-              seed=0, step_offset=0):
+              gate: bool = True, activity: jax.Array | None = None,
+              mac_telemetry: bool = True, seed=0, step_offset=0):
     """A whole fused event sequence: spikes (T, ..., I), v (..., N),
     noise (T, ..., N) — or None for the in-kernel counter noise streams
     (see ``fused_step``; this is the noisy-silicon serving path, with no
@@ -279,8 +314,12 @@ def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
 
     One kernel launch covers all T time steps (time-major grid axis, LIF
     membrane carried in VMEM) and any virtual-macro tiling the layer needs.
+    ``gate`` selects activity-gated execution (default; pass the
+    ``plan_activity`` map as ``activity`` to build the plan once per
+    sequence and reuse it for telemetry); ``mac_telemetry=False`` skips
+    the raw-MAC HBM stack (mac is None).
     Returns (v_out (..., N), spikes_out (T, ..., N), mask (T, ..., N),
-    adc_steps (T, ...), mac (T, ..., NC)).
+    adc_steps (T, ...), mac (T, ..., NC) or None).
     """
     from repro.kernels import ops as kernel_ops
     s = ternary_lib.ternary_input_encode(spikes)
@@ -288,7 +327,8 @@ def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
         s, fw.msb, fw.lsb, fw.boundaries, fw.levels, fw.scale, v, noise,
         fw.w_dend, mode=fw.mode, k=k, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
-        use_snl=use_snl, ima_noise=ima_noise, snl_amp=snl_amp, seed=seed,
+        use_snl=use_snl, ima_noise=ima_noise, snl_amp=snl_amp, gate=gate,
+        activity=activity, mac_telemetry=mac_telemetry, seed=seed,
         step_offset=step_offset)
     return v_out, spk, mask, steps, mac
 

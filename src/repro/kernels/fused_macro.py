@@ -33,8 +33,32 @@ TPU-native equivalent of staying inside the macro: one grid step per
      with the membrane carried in VMEM across the whole T axis,
 
 all on VREG/VMEM-resident state.  Only the per-step (spikes, mask,
-adc_steps) — and the raw MAC for telemetry — touch HBM; the LIF membrane is
-written back once per row tile, after the last time step.
+adc_steps) — and, when requested, the raw MAC for telemetry — touch HBM;
+the LIF membrane is written back once per row tile, after the last time
+step.
+
+Activity-gated sparse execution
+-------------------------------
+The silicon's 0.8 pJ/SOP comes from *not* spending energy on inactive rows:
+event tensors are a few percent dense, and the macro only charges RBLs for
+rows that fire.  The kernel reproduces that with an ``activity`` occupancy
+map: a cheap host-side pass over the ternary ``(T, M, K)`` input marks each
+``(step, row-tile, K-tile)`` block that contains at least one event, and the
+map rides into the kernel as a scalar-prefetch operand (SMEM-resident, read
+before the block's compute issues).  An all-zero activation block can only
+contribute an exactly-zero partial sum, so the int8 plane decode + MXU
+contraction for it are ``pl.when``-skipped without changing a single output
+bit — clean *and* noisy outputs stay equal to the ``kernels/ref.py``
+oracles, because the Fig. 7 noise draws key on ``(seed, step, row, col)``
+and are consumed at the ramp stage, which still runs every step.  The gated
+path additionally turns the KWN early stop from telemetry into compute: the
+descending one-hot sweep starts at the highest code actually present in the
+tile and exits as soon as every row has its K winners (a bounded
+``while_loop`` instead of the fixed 2^code_bits ``fori_loop``; skipped
+levels have no crossings or no admission slots left, so mask/steps are
+bit-identical).  Raw-MAC telemetry is opt-out (``mac_telemetry=False``
+keeps the accumulator in VMEM scratch and never writes the ``(T, M, NC)``
+stack to HBM — the serving default).
 
 Kernel layout / VMEM budget
 ---------------------------
@@ -43,13 +67,17 @@ time.  Per grid step the streamed working set is the ``bm x bk`` int8
 activation block and two ``bk x bn`` int8 weight planes (the Pallas pipeline
 double-buffers these across grid steps, so weight-plane DMA overlaps the MXU
 contraction); resident across a time step are the full-width ``(bm, NC)``
-f32 MAC accumulator, the 2^code_bits-entry codebook, and the ``(bm, N)`` f32
-LIF membrane (resident across the whole T axis).  At the defaults
-(bm=128, bk=256, bn=128) a single-macro layer (NC=N=128) costs
+f32 MAC accumulator (an HBM-backed output block when ``mac_telemetry`` is
+on, a VMEM scratch buffer when off — same footprint either way), the
+2^code_bits-entry codebook, and the ``(bm, N)`` f32 LIF membrane (resident
+across the whole T axis).  The activity map adds ``T * (M/bm) * (K/bk)``
+int32 words of SMEM (scalar prefetch) — a few KB even for long streams,
+never a VMEM tenant.  At the defaults (bm=128, bk=256, bn=128) a
+single-macro layer (NC=N=128) costs
 
     x        128*256      int8   =  32 KB   (x2 double buffered)
     planes 2*256*128      int8   =  64 KB   (x2 double buffered)
-    mac      128*128      f32    =  64 KB
+    mac      128*128      f32    =  64 KB   (output block or scratch)
     v + noise + outputs ~6*128*128 f32 ~ 384 KB
 
 ~0.7 MB, and each additional column tile adds only 64 KB of accumulator +
@@ -60,6 +88,20 @@ the real ceiling: NC beyond ~1-2k columns per kernel should split at the
 model layer.  Folding T into the grid adds *no* VMEM (one time step is
 resident at a time); it removes the per-step kernel launch + weight-plane
 re-staging that dominates short-step event-stream serving.
+
+Tile-shape / activity-granularity heuristic
+-------------------------------------------
+Occupancy is tracked per ``(step, row-tile, K-tile)`` block, so the tile
+plan *is* the gating granularity: a block is skippable only if every one of
+its ``bm x bk`` entries is zero.  ``plan_tiles`` therefore prefers the
+smallest lane-aligned K tile that covers the layer (``bk =
+ceil_to_128(K)`` when K < 256, the physical macro row count otherwise):
+padding K up to an oversized tile would dilute real events across dead
+zero columns and make blocks look occupied-by-construction, while an
+aligned tile keeps every activity block dense with real rows.  Row tiles
+follow the batch (``bm = min(128, ceil_to_8(M))``) so a batch the serving
+engine packs by measured event density maps quiet requests onto quiet —
+skippable — row tiles.
 
 When to prefer the fused step
 -----------------------------
@@ -84,6 +126,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 from repro.core import ctrprng
 
@@ -106,7 +149,10 @@ class TilePlan(NamedTuple):
     columns the KWN sweep may admit (padded columns are excluded from the
     ramp inside the kernel).  ``vmem_resident_bytes`` counts the blocks live
     in VMEM per grid step (x + double-buffered weight planes + accumulator +
-    LIF state + per-step outputs), not the head's transient one-hots.
+    LIF state + per-step outputs), not the head's transient one-hots; the
+    activity map is SMEM-resident (``activity_bytes``) and not counted.
+    ``activity_shape`` is the occupancy-map geometry the gated kernel
+    prefetches: one int32 word per (step, row-tile, K-tile) block.
     """
 
     bm: int
@@ -125,6 +171,17 @@ class TilePlan(NamedTuple):
         resident = 4 * (self.bm * self.nc_pad                     # mac f32
                         + 5 * self.bm * self.n_pad)               # v/noise/out
         return 2 * streamed + resident
+
+    @property
+    def activity_shape(self) -> tuple[int, int, int]:
+        """(T, row-tiles, K-tiles): one occupancy word per gateable block."""
+        return (self.grid[1], self.grid[0], self.grid[3])
+
+    @property
+    def activity_bytes(self) -> int:
+        """SMEM bytes the scalar-prefetched occupancy map occupies."""
+        t, n_i, n_k = self.activity_shape
+        return 4 * t * n_i * n_k
 
 
 def _ceil_mult(n: int, m: int) -> int:
@@ -146,9 +203,16 @@ def plan_tiles(m: int, k_dim: int, nc: int, n: int, t: int = 1, *,
     Zero weight columns are MAC-neutral; the KWN sweep additionally masks
     padded columns out of the ramp (``n_valid``) so they can never steal
     winner slots.
+
+    K tiling aligns with the activity-map granularity (see the module
+    docstring): layers narrower than the 256-row physical macro take the
+    smallest lane-aligned tile that covers them (``ceil_to_128(K)``), so an
+    occupancy block is never padded-zero by construction and per-block
+    gating stays meaningful; layers at or past 256 rows tile at the
+    physical macro row count.
     """
     bm_ = bm or min(DEFAULT_BM, _ceil_mult(m, 8))
-    bk_ = bk or DEFAULT_BK
+    bk_ = bk or (DEFAULT_BK if k_dim >= DEFAULT_BK else _ceil_mult(k_dim, 128))
     bn_req = bn or DEFAULT_BN
     if nc <= bn_req:
         bn_ = nc
@@ -174,24 +238,48 @@ def plan_tiles(m: int, k_dim: int, nc: int, n: int, t: int = 1, *,
 # ---------------------------------------------------------------------------
 
 def _accumulate_mac_tile(x_ref, msb_ref, lsb_ref, mac_ref, *, ratio: float,
-                         bn: int):
-    """Twin-cell decode + MXU MAC into this column tile's accumulator slice."""
+                         bn: int, occ=None):
+    """Twin-cell decode + MXU MAC into this column tile's accumulator slice.
+
+    With ``occ`` (the scalar-prefetched occupancy word for this
+    (step, row-tile, K-tile) block), the decode + contraction are
+    ``pl.when``-skipped for all-zero activation blocks: a skipped block's
+    partial sum is exactly zero, so the (always-run) zero-init at the first
+    K tile plus occupied-block adds reproduce the dense accumulator value
+    bit-for-bit (every partial is a small exact integer; f32 addition of
+    exact zeros is the identity).
+    """
     j, kk = pl.program_id(2), pl.program_id(3)
-    x = x_ref[0].astype(jnp.float32)
-    w = ratio * msb_ref[...].astype(jnp.float32) \
-        + lsb_ref[...].astype(jnp.float32)
-    part = jax.lax.dot_general(
-        x, w, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)[None]
     col = (pl.dslice(0, 1), pl.dslice(None), pl.dslice(j * bn, bn))
 
-    @pl.when(kk == 0)
-    def _init():
-        pl.store(mac_ref, col, jnp.zeros_like(part) + part)
+    def _decoded_part():
+        x = x_ref[0].astype(jnp.float32)
+        w = ratio * msb_ref[...].astype(jnp.float32) \
+            + lsb_ref[...].astype(jnp.float32)
+        return jax.lax.dot_general(
+            x, w, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)[None]
 
-    @pl.when(kk > 0)
-    def _accumulate():
-        pl.store(mac_ref, col, pl.load(mac_ref, col) + part)
+    if occ is None:                       # dense path: decode + MAC always
+        part = _decoded_part()
+
+        @pl.when(kk == 0)
+        def _init():
+            pl.store(mac_ref, col, jnp.zeros_like(part) + part)
+
+        @pl.when(kk > 0)
+        def _accumulate():
+            pl.store(mac_ref, col, pl.load(mac_ref, col) + part)
+        return
+
+    @pl.when(kk == 0)
+    def _zero():
+        pl.store(mac_ref, col,
+                 jnp.zeros((1, x_ref.shape[1], bn), jnp.float32))
+
+    @pl.when(occ > 0)
+    def _mac():
+        pl.store(mac_ref, col, pl.load(mac_ref, col) + _decoded_part())
 
 
 def _ramp_codes(x: jax.Array, bounds: jax.Array) -> jax.Array:
@@ -208,13 +296,21 @@ def _lut_reconstruct(codes: jax.Array, levels: jax.Array,
     return jnp.sum(onehot * levels[None, None, :], axis=-1)
 
 
-def _kwn_sweep(codes: jax.Array, k: int, n_codes: int):
-    """Descending-ramp priority-encoded top-K (same algorithm as kwn_topk)."""
+def _kwn_sweep(codes: jax.Array, k: int, n_codes: int, bounded: bool = False):
+    """Descending-ramp priority-encoded top-K (same algorithm as kwn_topk).
+
+    ``bounded=True`` is the activity-gated variant: the sweep starts at the
+    highest code actually present in the tile and exits once every row has
+    its K winners — a data-bounded ``while_loop`` instead of the fixed
+    2^code_bits ``fori_loop``.  Skipped head levels have no crossings and
+    skipped tail levels have no admission slots left (``n_found == k``
+    blocks every admit), so mask and early-stop step counts are
+    bit-identical to the full sweep; only the work changes.
+    """
     bm, n = codes.shape
 
-    def sweep(step, carry):
+    def descend(level, carry):
         n_found, mask, steps = carry
-        level = n_codes - 1 - step                        # descending ramp
         crossing = (codes == level) & (mask == 0)
         order = jnp.cumsum(crossing.astype(jnp.int32), axis=-1)
         admit = crossing & ((n_found + order) <= k)       # priority encoder
@@ -222,12 +318,27 @@ def _kwn_sweep(codes: jax.Array, k: int, n_codes: int):
         n_found = n_found + jnp.sum(admit.astype(jnp.int32), axis=-1,
                                     keepdims=True)
         done_now = (n_found >= k) & (steps < 0)
-        steps = jnp.where(done_now, step, steps)
+        steps = jnp.where(done_now, n_codes - 1 - level, steps)
         return n_found, mask, steps
 
     init = (jnp.zeros((bm, 1), jnp.int32), jnp.zeros((bm, n), jnp.int32),
             jnp.full((bm, 1), -1, jnp.int32))
-    _, mask, steps = jax.lax.fori_loop(0, n_codes, sweep, init)
+    if bounded:
+        def body(carry):
+            level, n_found, mask, steps = carry
+            n_found, mask, steps = descend(level, (n_found, mask, steps))
+            return level - 1, n_found, mask, steps
+
+        def cond_fn(carry):
+            level, n_found = carry[0], carry[1]
+            return (level >= 0) & jnp.any(n_found < k)
+
+        top = jnp.max(codes)              # occupied code range upper bound
+        _, _, mask, steps = jax.lax.while_loop(cond_fn, body, (top, *init))
+    else:
+        _, mask, steps = jax.lax.fori_loop(
+            0, n_codes,
+            lambda step, carry: descend(n_codes - 1 - step, carry), init)
     return mask.astype(jnp.float32), jnp.where(steps < 0, n_codes - 1, steps)
 
 
@@ -290,25 +401,59 @@ def _lif_noise(noise_ref, rest_shape, seed, step, *, row0, logical_n,
     return jnp.float32(snl_amp) * sign
 
 
-def _seq_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
-                    scale_ref, ctl_ref, v0_ref, *rest, ratio, bm, bn, n_j,
-                    n_k, n_valid, k, n_codes, beta, v_th1, v_th2, v_reset,
-                    v_lim, use_snl, drive_gain, ima_noise, snl_amp,
-                    logical_n, has_noise_ref):
-    if has_noise_ref:
-        noise_ref, mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
-    else:
-        noise_ref = None
+def _unpack_refs(refs, *, gated, has_noise_ref, has_w_dend, mac_out):
+    """Positional-ref unpacking shared by both mode kernels.
+
+    Ref order is (scalar prefetch), inputs, outputs, scratch:
+    ``[occ?] x msb lsb bounds levels scale ctl [w_dend?] v0 [noise?]
+    [mac(out)?] v spike mask steps [mac(scratch)?]``.
+    """
+    refs = list(refs)
+    occ_ref = refs.pop(0) if gated else None
+    names = ["x", "msb", "lsb", "bounds", "levels", "scale", "ctl"]
+    if has_w_dend:
+        names.append("w_dend")
+    names.append("v0")
+    ins = dict(zip(names, refs[:len(names)]))
+    rest = refs[len(names):]
+    noise_ref = rest.pop(0) if has_noise_ref else None
+    if mac_out:
         mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
+    else:
+        v_ref, spike_ref, mask_ref, steps_ref, mac_ref = rest
+    return (occ_ref, ins, noise_ref, mac_ref, v_ref, spike_ref, mask_ref,
+            steps_ref)
+
+
+def _block_occupancy(occ_ref, *, i, t, kk, n_i, n_k):
+    """This grid step's scalar-prefetched occupancy word (or None)."""
+    if occ_ref is None:
+        return None
+    return occ_ref[(t * n_i + i) * n_k + kk]
+
+
+def _seq_kwn_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_valid, k,
+                    n_codes, beta, v_th1, v_th2, v_reset, v_lim, use_snl,
+                    drive_gain, ima_noise, snl_amp, logical_n, has_noise_ref,
+                    gated, mac_out):
+    (occ_ref, ins, noise_ref, mac_ref, v_ref, spike_ref, mask_ref,
+     steps_ref) = _unpack_refs(refs, gated=gated,
+                               has_noise_ref=has_noise_ref,
+                               has_w_dend=False, mac_out=mac_out)
+    x_ref, msb_ref, lsb_ref = ins["x"], ins["msb"], ins["lsb"]
+    bounds_ref, levels_ref = ins["bounds"], ins["levels"]
+    scale_ref, ctl_ref, v0_ref = ins["scale"], ins["ctl"], ins["v0"]
     i, t = pl.program_id(0), pl.program_id(1)
     j, kk = pl.program_id(2), pl.program_id(3)
     row0 = i * bm
+    occ = _block_occupancy(occ_ref, i=i, t=t, kk=kk, n_i=n_i, n_k=n_k)
 
     @pl.when((t == 0) & (j == 0) & (kk == 0))
     def _load_membrane():
         v_ref[...] = v0_ref[...]
 
-    _accumulate_mac_tile(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio, bn=bn)
+    _accumulate_mac_tile(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio,
+                         bn=bn, occ=occ)
 
     @pl.when((j == n_j - 1) & (kk == n_k - 1))
     def _head():
@@ -325,7 +470,7 @@ def _seq_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
                                      logical_n=logical_n,
                                      ima_noise=ima_noise, n_codes=n_codes)
         codes = _mask_padded_columns(codes, n_valid)
-        maskf, steps = _kwn_sweep(codes, k, n_codes)
+        maskf, steps = _kwn_sweep(codes, k, n_codes, bounded=gated)
         recon = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
         # Winner drive: LUT value x per-column weight scale, losers exactly 0.
         drive = recon * scale_ref[...] * maskf * drive_gain
@@ -340,24 +485,29 @@ def _seq_kwn_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
         steps_ref[0] = steps
 
 
-def _seq_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
-                    scale_ref, ctl_ref, w_dend_ref, v0_ref, *rest, ratio, bm,
-                    bn, n_j, n_k, n_codes, n_branches, beta, v_th1, v_th2,
-                    v_reset, v_lim, drive_gain, ima_noise, logical_n,
-                    has_noise_ref):
-    if has_noise_ref:
-        _, mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
-    else:
-        mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
+def _seq_nld_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_codes,
+                    n_branches, beta, v_th1, v_th2, v_reset, v_lim,
+                    drive_gain, ima_noise, logical_n, has_noise_ref, gated,
+                    mac_out):
+    (occ_ref, ins, _, mac_ref, v_ref, spike_ref, mask_ref,
+     steps_ref) = _unpack_refs(refs, gated=gated,
+                               has_noise_ref=has_noise_ref,
+                               has_w_dend=True, mac_out=mac_out)
+    x_ref, msb_ref, lsb_ref = ins["x"], ins["msb"], ins["lsb"]
+    bounds_ref, levels_ref = ins["bounds"], ins["levels"]
+    scale_ref, ctl_ref = ins["scale"], ins["ctl"]
+    w_dend_ref, v0_ref = ins["w_dend"], ins["v0"]
     i, t = pl.program_id(0), pl.program_id(1)
     j, kk = pl.program_id(2), pl.program_id(3)
     row0 = i * bm
+    occ = _block_occupancy(occ_ref, i=i, t=t, kk=kk, n_i=n_i, n_k=n_k)
 
     @pl.when((t == 0) & (j == 0) & (kk == 0))
     def _load_membrane():
         v_ref[...] = v0_ref[...]
 
-    _accumulate_mac_tile(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio, bn=bn)
+    _accumulate_mac_tile(x_ref, msb_ref, lsb_ref, mac_ref, ratio=ratio,
+                         bn=bn, occ=occ)
 
     @pl.when((j == n_j - 1) & (kk == n_k - 1))
     def _head():
@@ -393,13 +543,14 @@ def _seq_nld_kernel(x_ref, msb_ref, lsb_ref, bounds_ref, levels_ref,
 
 @functools.partial(jax.jit, static_argnames=(
     "mode", "k", "ratio", "drive_gain", "use_snl", "bm", "bk", "bn",
-    "n_valid", "ima_noise", "snl_amp", "logical_n",
+    "n_valid", "ima_noise", "snl_amp", "logical_n", "mac_telemetry",
     "interpret") + _LIF_STATICS)
 def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                     boundaries: jax.Array, levels: jax.Array,
                     scale: jax.Array, v: jax.Array,
                     noise: jax.Array | None = None,
-                    w_dend: jax.Array | None = None, *,
+                    w_dend: jax.Array | None = None,
+                    activity: jax.Array | None = None, *,
                     mode: str = "kwn", k: int = 12, ratio: float = 2.0,
                     drive_gain: float = 1.0, beta: float = 0.9,
                     v_th1: float = 1.0, v_th2: float = 0.6,
@@ -408,6 +559,7 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                     bk: int = DEFAULT_BK, bn: int | None = None,
                     n_valid: int | None = None, ima_noise=None,
                     snl_amp: float = 0.0, logical_n: int | None = None,
+                    mac_telemetry: bool = True,
                     seed=0, step_offset=0, interpret: bool = True):
     """A whole fused event sequence: T macro time steps in one kernel.
 
@@ -443,12 +595,24 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
     snl_amp:     in-kernel SNL noise amplitude (used only when noise=None).
     logical_n:   unpadded per-branch column count — the counter's column
                  coordinate basis (defaults to the padded width).
+    activity:    (T, M/bm, K/bk) int32 occupancy map (nonzero = block has at
+                 least one event), or None for dense execution.  Delivered
+                 to the kernel via scalar prefetch; all-zero activation
+                 blocks skip the plane decode + MXU contraction, and the
+                 KWN ramp sweep is bounded to the occupied code range — both
+                 without changing any output bit (see module docstring).
+    mac_telemetry: emit the raw (T, M, NC) integer-unit MAC stack to HBM
+                 (True, the historical default — needed by calibration and
+                 codebook studies).  False keeps the accumulator in VMEM
+                 scratch: nothing but the per-step (spikes, mask,
+                 adc_steps) leaves the kernel — the serving default — and
+                 the returned mac is None.
     seed:        traced int32 scalar keying both noise streams.
     step_offset: traced int32 added to the grid time index (lets the
                  per-step launch cadence keep the seq-identical stream).
 
-    Returns (mac (T, M, NC) f32, v_out (M, N) f32, spikes (T, M, N) f32,
-    mask (T, M, N) f32, adc_steps (T, M, 1) i32).
+    Returns (mac (T, M, NC) f32 or None, v_out (M, N) f32,
+    spikes (T, M, N) f32, mask (T, M, N) f32, adc_steps (T, M, 1) i32).
     """
     t_steps, m, kdim = x.shape
     kdim2, nc = msb.shape
@@ -465,20 +629,26 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
     n_codes = levels.shape[0]
     assert boundaries.shape[0] == n_codes - 1
     grid = (m // bm, t_steps, nc // bn, kdim // bk)
-    n_j, n_k = grid[2], grid[3]
+    n_i, n_j, n_k = grid[0], grid[2], grid[3]
     has_noise_ref = noise is not None
+    gated = activity is not None
+    if gated:
+        assert activity.shape == (t_steps, n_i, n_k), \
+            (activity.shape, (t_steps, n_i, n_k))
 
-    row_spec = lambda shape: pl.BlockSpec(shape, lambda i, t, j, kk: (i, 0))
-    step_spec = lambda shape: pl.BlockSpec(shape,
-                                           lambda i, t, j, kk: (t, i, 0))
+    # Index maps take a trailing scalar-prefetch ref on the gated path.
+    row_spec = lambda shape: pl.BlockSpec(shape,
+                                          lambda i, t, j, kk, *_: (i, 0))
+    step_spec = lambda shape: pl.BlockSpec(
+        shape, lambda i, t, j, kk, *_: (t, i, 0))
     const_spec = lambda shape: pl.BlockSpec(shape,
-                                            lambda i, t, j, kk: (0, 0))
+                                            lambda i, t, j, kk, *_: (0, 0))
     ctl = jnp.stack([jnp.asarray(seed, jnp.int32),
                      jnp.asarray(step_offset, jnp.int32)]).reshape(1, 2)
     in_specs = [
-        pl.BlockSpec((1, bm, bk), lambda i, t, j, kk: (t, i, kk)),   # x
-        pl.BlockSpec((bk, bn), lambda i, t, j, kk: (kk, j)),         # msb
-        pl.BlockSpec((bk, bn), lambda i, t, j, kk: (kk, j)),         # lsb
+        pl.BlockSpec((1, bm, bk), lambda i, t, j, kk, *_: (t, i, kk)),  # x
+        pl.BlockSpec((bk, bn), lambda i, t, j, kk, *_: (kk, j)),        # msb
+        pl.BlockSpec((bk, bn), lambda i, t, j, kk, *_: (kk, j)),        # lsb
         const_spec((1, n_codes - 1)),                                # bounds
         const_spec((1, n_codes)),                                    # levels
         const_spec((1, nc)),                                         # scale
@@ -493,11 +663,13 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
     if mode == "kwn":
         assert nc == n, (nc, n)
         kernel = functools.partial(
-            _seq_kwn_kernel, ratio=ratio, bm=bm, bn=bn, n_j=n_j, n_k=n_k,
-            n_valid=n_valid, k=k, n_codes=n_codes, beta=beta, v_th1=v_th1,
-            v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl,
-            drive_gain=drive_gain, ima_noise=ima_noise, snl_amp=snl_amp,
-            logical_n=logical_n, has_noise_ref=has_noise_ref)
+            _seq_kwn_kernel, ratio=ratio, bm=bm, bn=bn, n_i=n_i, n_j=n_j,
+            n_k=n_k, n_valid=n_valid, k=k, n_codes=n_codes, beta=beta,
+            v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+            use_snl=use_snl, drive_gain=drive_gain, ima_noise=ima_noise,
+            snl_amp=snl_amp, logical_n=logical_n,
+            has_noise_ref=has_noise_ref, gated=gated,
+            mac_out=mac_telemetry)
     elif mode == "nld":
         assert w_dend is not None and nc % n == 0, (nc, n)
         n_branches = nc // n
@@ -505,11 +677,12 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
         in_specs.append(const_spec((n_branches, n)))                 # w_dend
         inputs.append(w_dend.astype(jnp.float32))
         kernel = functools.partial(
-            _seq_nld_kernel, ratio=ratio, bm=bm, bn=bn, n_j=n_j, n_k=n_k,
-            n_codes=n_codes, n_branches=n_branches, beta=beta, v_th1=v_th1,
-            v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+            _seq_nld_kernel, ratio=ratio, bm=bm, bn=bn, n_i=n_i, n_j=n_j,
+            n_k=n_k, n_codes=n_codes, n_branches=n_branches, beta=beta,
+            v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
             drive_gain=drive_gain, ima_noise=ima_noise,
-            logical_n=logical_n, has_noise_ref=has_noise_ref)
+            logical_n=logical_n, has_noise_ref=has_noise_ref, gated=gated,
+            mac_out=mac_telemetry)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 
@@ -519,32 +692,57 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
         in_specs.append(step_spec((1, bm, n)))                       # noise
         inputs.append(noise.astype(jnp.float32))
 
-    return pl.pallas_call(
-        kernel,
-        grid=grid,
-        in_specs=in_specs,
-        out_specs=[
-            step_spec((1, bm, nc)),                          # mac telemetry
-            row_spec((bm, n)),                               # carried V_mem
-            step_spec((1, bm, n)), step_spec((1, bm, n)),
-            step_spec((1, bm, 1)),
-        ],
-        out_shape=[
-            jax.ShapeDtypeStruct((t_steps, m, nc), jnp.float32),
-            jax.ShapeDtypeStruct((m, n), jnp.float32),
-            jax.ShapeDtypeStruct((t_steps, m, n), jnp.float32),
-            jax.ShapeDtypeStruct((t_steps, m, n), jnp.float32),
-            jax.ShapeDtypeStruct((t_steps, m, 1), jnp.int32),
-        ],
-        interpret=interpret,
-    )(*inputs)
+    out_specs = [
+        row_spec((bm, n)),                               # carried V_mem
+        step_spec((1, bm, n)), step_spec((1, bm, n)),
+        step_spec((1, bm, 1)),
+    ]
+    out_shape = [
+        jax.ShapeDtypeStruct((m, n), jnp.float32),
+        jax.ShapeDtypeStruct((t_steps, m, n), jnp.float32),
+        jax.ShapeDtypeStruct((t_steps, m, n), jnp.float32),
+        jax.ShapeDtypeStruct((t_steps, m, 1), jnp.int32),
+    ]
+    scratch_shapes = []
+    if mac_telemetry:
+        out_specs.insert(0, step_spec((1, bm, nc)))      # mac telemetry
+        out_shape.insert(0,
+                         jax.ShapeDtypeStruct((t_steps, m, nc), jnp.float32))
+    else:
+        # accumulator never leaves VMEM: same footprint, zero HBM traffic
+        scratch_shapes = [pltpu.VMEM((1, bm, nc), jnp.float32)]
+
+    if gated:
+        outs = pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=grid, in_specs=in_specs,
+                out_specs=out_specs, scratch_shapes=scratch_shapes),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(activity.reshape(-1).astype(jnp.int32), *inputs)
+    else:
+        outs = pl.pallas_call(
+            kernel,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            scratch_shapes=scratch_shapes,
+            interpret=interpret,
+        )(*inputs)
+    if mac_telemetry:
+        return outs
+    v_out, spikes, mask, steps = outs
+    return None, v_out, spikes, mask, steps
 
 
 def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                      boundaries: jax.Array, levels: jax.Array,
                      scale: jax.Array, v: jax.Array,
                      noise: jax.Array | None = None,
-                     w_dend: jax.Array | None = None, *,
+                     w_dend: jax.Array | None = None,
+                     activity: jax.Array | None = None, *,
                      mode: str = "kwn", k: int = 12, ratio: float = 2.0,
                      drive_gain: float = 1.0, beta: float = 0.9,
                      v_th1: float = 1.0, v_th2: float = 0.6,
@@ -553,20 +751,24 @@ def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                      bk: int = DEFAULT_BK, bn: int | None = None,
                      n_valid: int | None = None, ima_noise=None,
                      snl_amp: float = 0.0, logical_n: int | None = None,
+                     mac_telemetry: bool = True,
                      seed=0, step_offset=0, interpret: bool = True):
     """One fused macro time step: the T=1 degenerate of ``fused_macro_seq``.
 
-    x (M, K), v/noise (M, N); returns (mac (M, NC), v_out, spikes, mask,
-    adc_steps (M, 1)) exactly like the PR 1 single-step kernel.  With
-    ``ima_noise``, pass the scan index as ``step_offset`` to reproduce the
-    one-launch sequence stream exactly.
+    x (M, K), v/noise (M, N), activity (M/bm, K/bk); returns (mac (M, NC)
+    or None, v_out, spikes, mask, adc_steps (M, 1)) exactly like the PR 1
+    single-step kernel.  With ``ima_noise``, pass the scan index as
+    ``step_offset`` to reproduce the one-launch sequence stream exactly.
     """
     mac, v_out, spikes, mask, steps = fused_macro_seq(
         x[None], msb, lsb, boundaries, levels, scale, v,
         None if noise is None else noise[None], w_dend,
+        None if activity is None else activity[None],
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
         use_snl=use_snl, bm=bm, bk=bk, bn=bn, n_valid=n_valid,
         ima_noise=ima_noise, snl_amp=snl_amp, logical_n=logical_n,
+        mac_telemetry=mac_telemetry,
         seed=seed, step_offset=step_offset, interpret=interpret)
-    return mac[0], v_out, spikes[0], mask[0], steps[0]
+    return (None if mac is None else mac[0], v_out, spikes[0], mask[0],
+            steps[0])

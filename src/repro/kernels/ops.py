@@ -102,6 +102,21 @@ def _unpad_cols(a, n: int, n_pad: int, n_branches: int):
     return branched[..., :n].reshape(*lead, n_branches * n)
 
 
+def fused_activity_map(xm: jax.Array, plan) -> jax.Array:
+    """Per-(step, row-tile, K-tile) occupancy of a padded time-major input.
+
+    xm (T, m_pad, k_pad) ternary events, plan a ``fused_macro.TilePlan``;
+    returns the (T, m_pad/bm, k_pad/bk) int32 map (1 = the block holds at
+    least one event) the gated kernel consumes via scalar prefetch.  This
+    is the whole host-side activity-planning pass: one any-reduce over the
+    input, O(T*M*K) bit tests, negligible next to a single MAC step.
+    """
+    t = xm.shape[0]
+    n_i, n_k = plan.m_pad // plan.bm, plan.k_pad // plan.bk
+    occ = (xm != 0).reshape(t, n_i, plan.bm, n_k, plan.bk)
+    return occ.any(axis=(2, 4)).astype(jnp.int32)
+
+
 def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
                     w_dend=None, *, mode: str = "kwn", k: int = 12,
                     ratio: float = 2.0, drive_gain: float = 1.0,
@@ -109,7 +124,9 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
                     v_reset: float = 0.0, v_lim: float = 8.0,
                     use_snl: bool = True, bm: int | None = None,
                     bk: int | None = None, bn: int | None = None,
-                    ima_noise=None, snl_amp: float = 0.0, seed=0,
+                    ima_noise=None, snl_amp: float = 0.0,
+                    gate: bool = True, activity=None,
+                    mac_telemetry: bool = True, seed=0,
                     step_offset=0):
     """Batched time-major fused sequence; x (T, ..., K), v (..., N),
     noise (T, ..., N) or None for in-kernel counter noise.
@@ -121,13 +138,24 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
     survives).  Runs the whole sequence through one kernel launch with the
     LIF membrane carried in VMEM, then slices the padding back off.
 
+    ``gate`` (default on — it cannot change any output bit) runs the
+    activity-gated kernel: a per-(step, row-tile, K-tile) occupancy map is
+    computed from the events (``fused_activity_map``; or pass a
+    precomputed ``activity``) and scalar-prefetched into the kernel, which
+    skips the plane decode + MXU contraction for all-zero blocks and
+    bounds the KWN ramp sweep to the occupied code range.  ``gate=False``
+    is the dense execution the pre-sparsity pipeline ran — kept as the
+    benchmark baseline and for A/B parity tests.  ``mac_telemetry=False``
+    keeps the raw MAC accumulator in VMEM scratch (no (T, ..., NC) HBM
+    stack; the returned mac is None) — the serving default upstream.
+
     ``ima_noise`` (an ``ima.IMAKernelNoise``) turns on the in-kernel Fig. 7
     conversion-error model; the counter streams are keyed on *logical*
     (row, column) coordinates, so padding and tile choice cannot move a
     draw.  ``noise=None`` with ``snl_amp > 0`` generates the SNL sign noise
     in-kernel as well — the noisy path streams no per-step tensors at all.
 
-    Returns (mac (T, ..., NC), v_out (..., N), spikes (T, ..., N),
+    Returns (mac (T, ..., NC) or None, v_out (..., N), spikes (T, ..., N),
     mask (T, ..., N), adc_steps (T, ...)).
     """
     t = x.shape[0]
@@ -143,6 +171,10 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
                              n_branches=n_branches, bm=bm, bk=bk, bn=bn)
     xm = jnp.pad(xm, ((0, 0), (0, plan.m_pad - m0), (0, plan.k_pad - kdim)))
     vm = jnp.pad(vm, ((0, plan.m_pad - m0), (0, plan.n_pad - n)))
+    if not gate:
+        activity = None
+    elif activity is None:
+        activity = fused_activity_map(xm, plan)
     nm = None
     if noise is not None:
         nm = noise.reshape(t, -1, n)
@@ -157,14 +189,17 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
         w_dend_p = jnp.pad(w_dend, ((0, 0), (0, plan.n_pad - n)))
     mac, v_out, spikes, mask, steps = _fused.fused_macro_seq(
         xm, msb_p, lsb_p, boundaries, levels, scale_p, vm, nm, w_dend_p,
+        activity,
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
         use_snl=use_snl, bm=plan.bm, bk=plan.bk, bn=plan.bn,
         n_valid=plan.n_valid, ima_noise=ima_noise, snl_amp=snl_amp,
-        logical_n=n, seed=seed, step_offset=step_offset,
-        interpret=INTERPRET)
-    mac = _unpad_cols(mac[:, :m0], n, plan.n_pad, n_branches)
-    return (mac.reshape(t, *lead, nc),
+        logical_n=n, mac_telemetry=mac_telemetry, seed=seed,
+        step_offset=step_offset, interpret=INTERPRET)
+    if mac is not None:
+        mac = _unpad_cols(mac[:, :m0], n, plan.n_pad, n_branches)
+        mac = mac.reshape(t, *lead, nc)
+    return (mac,
             v_out[:m0, :n].reshape(*lead, n),
             spikes[:, :m0, :n].reshape(t, *lead, n),
             mask[:, :m0, :n].reshape(t, *lead, n),
@@ -178,14 +213,18 @@ def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise=None,
                      v_reset: float = 0.0, v_lim: float = 8.0,
                      use_snl: bool = True, bm: int | None = None,
                      bk: int | None = None, bn: int | None = None,
-                     ima_noise=None, snl_amp: float = 0.0, seed=0,
+                     ima_noise=None, snl_amp: float = 0.0,
+                     gate: bool = True, mac_telemetry: bool = True, seed=0,
                      step_offset=0):
     """Batched fused macro step; x (..., K), v/noise (..., N).
 
     The T=1 degenerate of ``fused_macro_seq`` (one kernel launch per time
-    step).  With ``ima_noise``, pass the scan index as ``step_offset`` so a
-    per-step cadence draws the same stream as the one-launch sequence.
-    Returns (mac (..., NC), v_out, spikes, mask (..., N), adc_steps (...,)).
+    step), including its activity gating (``gate``) and optional raw-MAC
+    telemetry (``mac_telemetry``).  With ``ima_noise``, pass the scan
+    index as ``step_offset`` so a per-step cadence draws the same stream
+    as the one-launch sequence.
+    Returns (mac (..., NC) or None, v_out, spikes, mask (..., N),
+    adc_steps (...,)).
     """
     mac, v_out, spikes, mask, steps = fused_macro_seq(
         x[None], msb, lsb, boundaries, levels, scale, v,
@@ -193,8 +232,10 @@ def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise=None,
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
         use_snl=use_snl, bm=bm, bk=bk, bn=bn, ima_noise=ima_noise,
-        snl_amp=snl_amp, seed=seed, step_offset=step_offset)
-    return mac[0], v_out, spikes[0], mask[0], steps[0]
+        snl_amp=snl_amp, gate=gate, mac_telemetry=mac_telemetry, seed=seed,
+        step_offset=step_offset)
+    return (None if mac is None else mac[0], v_out, spikes[0], mask[0],
+            steps[0])
 
 
 def nlq_convert(x, boundaries, levels):

@@ -127,7 +127,8 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
                     mode: str | None = None, k: int | None = None,
                     use_snl: bool | None = None,
                     noise: ima_lib.IMANoiseModel | None = None,
-                    fused: bool | str = False):
+                    fused: bool | str = False,
+                    mac_telemetry: bool = False):
     """Inference through the macro simulator (KWN Eq. 1 / NLD Eq. 2).
 
     ``fused`` selects the execution path:
@@ -157,9 +158,20 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
     ``jax.random``/PRBS draws, so noisy composed and noisy fused are
     statistically — not bitwise — equivalent.
 
+    The fused paths are *activity-gated*: the occupancy plan of the event
+    sequence is built once per sequence (``macro.plan_activity``) and the
+    kernel skips MAC work for all-zero (step, row-tile, K-tile) blocks and
+    bounds the KWN ramp sweep — output bits are unchanged, so gating has
+    no off switch here (benchmarks A/B it at the ops layer).  Raw-MAC
+    telemetry is *opt-in* (``mac_telemetry=True``): by default the fused
+    kernel keeps the accumulator in VMEM scratch and never writes the
+    (T, B, NC) MAC stack to HBM — inference consumes spikes and masks,
+    not raw MACs, and that write was the fused step's largest dead output.
+
     Returns (logits, telemetry) where telemetry carries adc_steps per time
-    step (early-stop latency), LIF update counts, and SOP counts for the
-    energy model.
+    step (early-stop latency), LIF update counts, SOP counts for the
+    energy model, and — on the fused paths — the skipped-block ratio of
+    the activity plan (the fraction of MAC blocks gating elided).
     """
     mode = mode or cfg.mode
     k = k or cfg.k
@@ -175,10 +187,10 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
                               noise_amp=cfg.noise_amp if use_snl else 0.0)
     if fused == "seq":
         return _forward_silicon_fused_seq(p, events, cfg, mode, k, use_snl,
-                                          mcfg, lif_p, key)
+                                          mcfg, lif_p, key, mac_telemetry)
     if fused == "step":
         return _forward_silicon_fused(p, events, cfg, mode, k, use_snl, mcfg,
-                                      lif_p, key)
+                                      lif_p, key, mac_telemetry)
     if fused is not False:
         raise ValueError(f"unknown fused={fused!r}; expected False, True, "
                          f"'step', or 'seq'")
@@ -246,7 +258,8 @@ def _noise_seed(key: jax.Array) -> jax.Array:
 
 
 def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
-                           use_snl: bool, mcfg, lif_p, key):
+                           use_snl: bool, mcfg, lif_p, key,
+                           mac_telemetry: bool = False):
     """Per-step fused inference scan body.
 
     Mirrors the composed ``forward_silicon`` step exactly in the clean case
@@ -255,7 +268,9 @@ def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
     scan index as the counter step word, so the stream — and therefore
     every spike — is bitwise-identical to the one-launch ``seq`` path.
     Kept for launch-overhead benchmarking; the serving default is the
-    time-major ``_forward_silicon_fused_seq``.
+    time-major ``_forward_silicon_fused_seq``.  Each per-step launch gates
+    on its own step's activity map (the T=1 slice of the sequence plan),
+    so the reported skipped-block ratio matches the seq path exactly.
     """
     b = events.shape[0]
     fw = _pack_fused(p, cfg, mode, mcfg)
@@ -280,7 +295,7 @@ def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
             v_lim=lif_lib.vmem_limit(lif_p.vmem_bits),
             use_snl=snl_active, ima_noise=ima_kn,
             snl_amp=lif_p.noise_amp if (noisy and snl_active) else 0.0,
-            seed=seed, step_offset=t)
+            mac_telemetry=mac_telemetry, seed=seed, step_offset=t)
         n_upd = float(k if mode == "kwn" else cfg.n_hidden)
         tele = {
             "adc_steps": tele["adc_steps"] + steps.astype(jnp.float32),
@@ -298,11 +313,24 @@ def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
                      jnp.arange(events.shape[1], dtype=jnp.int32)))
     logits = (counts / cfg.n_steps) @ p["w_out"]
     tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)
+    tele["skipped_block_ratio"] = _skipped_block_ratio(events, fw, cfg)
     return logits, tele
 
 
+def _skipped_block_ratio(events, fw, cfg: SNNConfig) -> jax.Array:
+    """Fraction of (step, row-tile, K-tile) MAC blocks gating elides,
+    broadcast per request (the plan is a batch-level property — requests
+    share row tiles)."""
+    act = macro_lib.plan_activity(jnp.moveaxis(events, 1, 0), fw,
+                                  cfg.n_hidden)
+    # clip: f32 mean of an all-ones map can land a ULP past 1.0
+    ratio = jnp.clip(1.0 - jnp.mean(act.astype(jnp.float32)), 0.0, 1.0)
+    return jnp.full((events.shape[0],), ratio)
+
+
 def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
-                               use_snl: bool, mcfg, lif_p, key):
+                               use_snl: bool, mcfg, lif_p, key,
+                               mac_telemetry: bool = False):
     """Time-major fused inference: the whole event sequence in one launch.
 
     The T axis is folded into the Pallas grid (``macro.fused_seq``), so the
@@ -316,6 +344,10 @@ def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
     is pre-drawn: both the IMA conversion error and the SNL sign noise
     come from the in-kernel counter PRNG, and the launch streams only the
     events themselves.
+
+    The activity plan is built once per sequence here and shared between
+    the kernel (scalar-prefetched occupancy gating) and the telemetry
+    (skipped-block ratio) — one host-side pass over the events per batch.
     """
     b, t_steps = events.shape[0], events.shape[1]
     fw = _pack_fused(p, cfg, mode, mcfg)
@@ -324,6 +356,7 @@ def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
     ima_kn = macro_lib.fused_kernel_noise(fw, mcfg)
     seed = _noise_seed(key) if noisy else jnp.int32(0)
     ev_t = jnp.moveaxis(events, 1, 0)                      # (T, B, N_in)
+    activity = macro_lib.plan_activity(ev_t, fw, cfg.n_hidden)
     st0 = lif_lib.lif_init((b, cfg.n_hidden))
     if noisy:
         noise_t = None          # all noise is generated inside the kernel
@@ -341,7 +374,7 @@ def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
         v_lim=lif_lib.vmem_limit(lif_p.vmem_bits),
         use_snl=snl_active, ima_noise=ima_kn,
         snl_amp=lif_p.noise_amp if (noisy and snl_active) else 0.0,
-        seed=seed)
+        activity=activity, mac_telemetry=mac_telemetry, seed=seed)
     n_upd = float(k if mode == "kwn" else cfg.n_hidden)
     sops_t = jnp.sum(jnp.abs(ev_t), axis=-1) * cfg.n_hidden   # (T, B)
 
@@ -362,6 +395,9 @@ def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
         (spk_t, steps_t, sops_t))
     logits = (counts / cfg.n_steps) @ p["w_out"]
     tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)
+    tele["skipped_block_ratio"] = jnp.full(
+        (b,), jnp.clip(1.0 - jnp.mean(activity.astype(jnp.float32)),
+                       0.0, 1.0))
     return logits, tele
 
 

@@ -1,0 +1,155 @@
+"""Validate BENCH_fused_macro.json: schema + clean-path perf regression gate.
+
+Two checks, stdlib only (runs in the minimal container and in CI):
+
+1. **Schema**: the file is ``{"bench": "fused_macro", "records": [...]}``
+   and every record carries exactly the fixed keys
+   ``op / shape / mode / median_ms / speedup / density`` with the right
+   types — so the perf-trajectory artifact stays diffable and downstream
+   tooling never meets a silently renamed field.
+
+2. **Regression gate** (``--baseline PATH``): every *tracked clean-path*
+   record (``mode == "kwn"`` with a baseline median of at least
+   ``MIN_TRACKED_MS``) present in both files is compared by
+   ``(op, shape, mode, density)`` key; the run fails if any regresses more
+   than ``--tolerance`` (default 20 %) in median wall time.  Medians are
+   first normalized by each file's own ``composed_step`` @ 128x256x128
+   record — the canonical baseline op — so the gate tracks *relative*
+   hot-path regressions rather than raw machine speed (CI runners and dev
+   boxes differ by more than any real regression we want to catch; an
+   unnormalized gate would flap on every hardware change).  A machine-wide
+   slowdown therefore passes; a fused-path-specific one fails.  Records
+   under the ``MIN_TRACKED_MS`` floor (the fastest gated single-step
+   points) are schema-checked but not perf-gated: interpret-mode medians
+   that small are dominated by dispatch jitter, not kernel work.
+
+Usage:
+  python tools/check_bench.py BENCH_fused_macro.json                 # schema
+  python tools/check_bench.py NEW.json --baseline COMMITTED.json     # + gate
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+RECORD_KEYS = {"op", "shape", "mode", "median_ms", "speedup", "density"}
+RECORD_TYPES = {"op": str, "shape": str, "mode": str,
+                "median_ms": (int, float), "speedup": (int, float),
+                "density": (int, float)}
+MODES = {"kwn", "kwn+noise"}
+NORMALIZER = ("composed_step", "128x256x128", "kwn")
+TRACKED_MODE = "kwn"   # clean path only: noise overhead is measured, not gated
+MIN_TRACKED_MS = 5.0   # below this, interpret-mode medians are pure jitter
+
+
+def check_schema(doc: dict) -> list[str]:
+    errs = []
+    if doc.get("bench") != "fused_macro":
+        errs.append(f"bench field: want 'fused_macro', got {doc.get('bench')!r}")
+    records = doc.get("records")
+    if not isinstance(records, list) or not records:
+        return errs + ["records: want a non-empty list"]
+    for i, rec in enumerate(records):
+        if not isinstance(rec, dict):
+            errs.append(f"records[{i}]: not an object")
+            continue
+        keys = set(rec)
+        if keys != RECORD_KEYS:
+            errs.append(f"records[{i}] ({rec.get('op')}): keys {sorted(keys)}"
+                        f" != {sorted(RECORD_KEYS)}")
+            continue
+        for key, typ in RECORD_TYPES.items():
+            if not isinstance(rec[key], typ) or isinstance(rec[key], bool):
+                errs.append(f"records[{i}].{key}: bad type {type(rec[key])}")
+        if rec["mode"] not in MODES:
+            errs.append(f"records[{i}].mode: {rec['mode']!r} not in {MODES}")
+        if isinstance(rec["median_ms"], (int, float)) and rec["median_ms"] <= 0:
+            errs.append(f"records[{i}].median_ms: {rec['median_ms']} <= 0")
+        if isinstance(rec["density"], (int, float)) \
+                and not 0.0 <= rec["density"] <= 1.0:
+            errs.append(f"records[{i}].density: {rec['density']} not in [0,1]")
+    return errs
+
+
+def _key(rec: dict):
+    return (rec["op"], rec["shape"], rec["mode"], rec["density"])
+
+
+def _normalizer(records: list[dict]) -> float:
+    for rec in records:
+        if (rec["op"], rec["shape"], rec["mode"]) == NORMALIZER:
+            return float(rec["median_ms"])
+    raise SystemExit(f"no normalizer record {NORMALIZER} in file")
+
+
+def check_regressions(new: dict, base: dict, tolerance: float) -> list[str]:
+    n_new = _normalizer(new["records"])
+    n_base = _normalizer(base["records"])
+    base_by_key = {_key(r): r for r in base["records"]
+                   if r["mode"] == TRACKED_MODE
+                   and r["median_ms"] >= MIN_TRACKED_MS}
+    errs = []
+    compared = 0
+    for rec in new["records"]:
+        if rec["mode"] != TRACKED_MODE or _key(rec) not in base_by_key:
+            continue
+        compared += 1
+        rel_new = rec["median_ms"] / n_new
+        rel_base = base_by_key[_key(rec)]["median_ms"] / n_base
+        if rel_new > rel_base * (1.0 + tolerance):
+            errs.append(
+                f"{rec['op']} @ {rec['shape']} d={rec['density']}: "
+                f"normalized median {rel_new:.3f} vs baseline "
+                f"{rel_base:.3f} (+{100 * (rel_new / rel_base - 1):.0f}%, "
+                f"tolerance {100 * tolerance:.0f}%)")
+    if compared == 0:
+        errs.append("no tracked records in common with the baseline")
+    return errs
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_json", help="freshly measured records to validate")
+    ap.add_argument("--baseline", default=None,
+                    help="committed records to gate regressions against")
+    ap.add_argument("--tolerance", type=float, default=0.20,
+                    help="allowed relative median regression (default 0.20)")
+    args = ap.parse_args(argv)
+
+    with open(args.bench_json) as f:
+        new = json.load(f)
+    errs = check_schema(new)
+    if errs:
+        print(f"{args.bench_json}: SCHEMA FAIL")
+        for e in errs:
+            print(f"  {e}")
+        return 1
+    print(f"{args.bench_json}: schema OK "
+          f"({len(new['records'])} records)")
+
+    if args.baseline:
+        with open(args.baseline) as f:
+            base = json.load(f)
+        base_errs = check_schema(base)
+        if base_errs:
+            print(f"{args.baseline}: baseline schema invalid; "
+                  f"skipping regression gate")
+            for e in base_errs:
+                print(f"  {e}")
+            return 1
+        regs = check_regressions(new, base, args.tolerance)
+        if regs:
+            print("REGRESSION FAIL")
+            for r in regs:
+                print(f"  {r}")
+            return 1
+        print(f"regression gate OK (tolerance "
+              f"{100 * args.tolerance:.0f}%, normalized by "
+              f"{NORMALIZER[0]} @ {NORMALIZER[1]})")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
