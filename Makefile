@@ -14,10 +14,18 @@ PYTHONPATH_SRC := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST := $(PYTHONPATH_SRC) python -m pytest
 LINT_PATHS := src tests benchmarks examples tools
 
-.PHONY: smoke test lint bench bench-check
+.PHONY: smoke train-smoke test lint bench bench-check
 
+# `smoke` and `train-smoke` partition the fast tier (silicon-training
+# tests are owned by `train-smoke`), so CI can run both without executing
+# anything twice; `make smoke train-smoke` is the whole tier-1 set.
 smoke:
-	$(PYTEST) -q -m "fast and not slow"
+	$(PYTEST) -q -m "fast and not slow" --ignore=tests/test_silicon_train.py
+
+# Tier-1 silicon-training gate: the 20-step loss-decrease smoke plus the
+# fast-marked gradient-parity subset of tests/test_silicon_train.py.
+train-smoke:
+	$(PYTEST) -q -m "fast and not slow" tests/test_silicon_train.py
 
 test:
 	$(PYTEST) -x -q

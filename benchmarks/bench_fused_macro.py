@@ -32,6 +32,14 @@
    outputs are parity-checked against the ``ref.py`` oracles at every
    density, and each entry reports the measured skipped-block ratio.
 
+6. **train step**: one SGD-momentum step through (a) the software BPTT
+   path (``forward_train``: dense-f32 scan + STE fake-quant — the
+   pre-silicon-training baseline), (b) the silicon path (forward = the
+   fused kernel, backward = the time-reversed surrogate BPTT Pallas
+   kernel via ``jax.custom_vjp``), and (c) the silicon path under the
+   in-kernel Fig. 7 noise model (noise-aware QAT) — the training-side
+   cost of gradients that see the serving kernel.
+
 Also emits the measured KWN early-stop step statistics (histogram + mean) the
 energy model consumes — the fused kernel reports them per row, so the energy
 figures below come from *measured* ramp activity, not the analytic fit.
@@ -335,6 +343,64 @@ def _density_sweep(t=T_SEQ, m=M, n_in=N_IN, n_out=N_OUT):
     }
 
 
+TRAIN_M, TRAIN_N_IN, TRAIN_N_OUT, TRAIN_T = 64, 256, 128, 16
+
+
+def _train_variants(m=TRAIN_M, n_in=TRAIN_N_IN, n_out=TRAIN_N_OUT,
+                    t=TRAIN_T):
+    """Train-step throughput: fused-VJP silicon training vs software BPTT.
+
+    One full SGD-momentum step each (loss + grad + update, jitted):
+    the software path back-propagates through the dense-f32 scan; the
+    silicon paths run the fused kernel forward and the surrogate backward
+    kernel (clean, and under the in-kernel Fig. 7 noise model — the
+    noise-aware QAT configuration).  ``train_step`` donates its parameter
+    buffers, so the timed closures copy them first — identical overhead on
+    every variant, negligible next to the step itself.
+    """
+    from repro.core import ima as ima_mod
+    from repro.models import snn
+
+    cfg = snn.SNNConfig(n_in=n_in, n_hidden=n_out, n_classes=10,
+                        n_steps=t, mode="kwn", k=K_WIN)
+    key = jax.random.PRNGKey(11)
+    k1, k2, k3 = jax.random.split(key, 3)
+    ev = _event_stream(k1, 0.05, (t, m, n_in)).astype(jnp.float32)
+    ev = jnp.moveaxis(ev, 0, 1)                       # (B, T, N_in)
+    lab = jax.random.randint(k2, (m,), 0, 10)
+    p0 = snn.init_params(cfg, k3)
+    m0 = jax.tree.map(jnp.zeros_like, p0)
+    lr = jnp.float32(0.05)
+    seed = jnp.float32(9.0)
+    noise = ima_mod.IMANoiseModel()
+
+    def run(**kw):
+        def step():
+            pp = jax.tree.map(jnp.copy, p0)
+            mm = jax.tree.map(jnp.copy, m0)
+            return snn.train_step(pp, mm, ev, lab, cfg, lr, **kw)
+        return step
+
+    bptt = run()
+    silicon = run(seed=seed, silicon=True)
+    silicon_noisy = run(seed=seed, silicon=True, noise=noise)
+    ms_bptt = _time(bptt, (), iters=5) / 1e3
+    ms_sil = _time(silicon, (), iters=5) / 1e3
+    ms_noisy = _time(silicon_noisy, (), iters=5) / 1e3
+    loss0 = float(bptt()[2])
+    loss_sil = float(silicon()[2])
+    return {
+        "batch": m, "geometry": f"{n_in}x{n_out}", "t": t,
+        "ms_bptt": round(ms_bptt, 1),
+        "ms_silicon_vjp": round(ms_sil, 1),
+        "ms_silicon_vjp_noisy": round(ms_noisy, 1),
+        "silicon_vs_bptt": round(ms_bptt / ms_sil, 2),
+        "noise_overhead": round(ms_noisy / ms_sil, 2),
+        "loss_bptt": round(loss0, 3),
+        "loss_silicon": round(loss_sil, 3),
+    }
+
+
 def _step_comparison(m, n_in, n_out, key):
     """Fused-vs-composed single step at a given layer geometry."""
     x, msb, lsb, cb, scale, v, noise = _operands(key, m=m, n_in=n_in,
@@ -370,6 +436,7 @@ def run() -> dict:
     seq_stats = _seq_variants()
     noisy_stats = _noisy_variants()
     density_stats = _density_sweep()
+    train_stats = _train_variants()
 
     # Early-stop statistics the energy model consumes (measured, per row).
     steps = np.asarray(fused[3]).reshape(-1)
@@ -398,6 +465,7 @@ def run() -> dict:
         "sequence": seq_stats,
         "noisy": noisy_stats,
         "density_sweep": density_stats,
+        "train": train_stats,
         "early_stop": {
             "mean_adc_steps": round(mean_steps, 2),
             "full_ramp_steps": full,
@@ -429,6 +497,7 @@ def records(report: dict) -> list[dict]:
     big, seq, noisy = (report["large_layer"], report["sequence"],
                        report["noisy"])
     sweep = report["density_sweep"]
+    train = report["train"]
     shape = f"{b}x{g}"
     big_shape = f"{big['batch']}x{big['geometry']}"
     seq_shape = f"{seq['batch']}x{seq['geometry']}x{seq['t']}"
@@ -462,6 +531,18 @@ def records(report: dict) -> list[dict]:
          "median_ms": noisy["ms_noisy"],
          "speedup": round(1.0 / noisy["noise_overhead"], 2),
          "density": SPIKE_RATE},
+    ]
+    train_shape = f"{train['batch']}x{train['geometry']}x{train['t']}"
+    out += [
+        {"op": "train_step_bptt", "shape": train_shape, "mode": "kwn",
+         "median_ms": train["ms_bptt"], "speedup": 1.0, "density": 0.05},
+        {"op": "train_step_silicon_vjp", "shape": train_shape,
+         "mode": "kwn", "median_ms": train["ms_silicon_vjp"],
+         "speedup": train["silicon_vs_bptt"], "density": 0.05},
+        {"op": "train_step_silicon_vjp", "shape": train_shape,
+         "mode": "kwn+noise", "median_ms": train["ms_silicon_vjp_noisy"],
+         "speedup": round(1.0 / train["noise_overhead"], 2),
+         "density": 0.05},
     ]
     for kind, kshape in (("seq", sweep_seq_shape), ("step",
                                                     sweep_step_shape)):

@@ -8,7 +8,17 @@ generated inside the kernel by the counter PRNG, so noisy accuracy costs
 the same single launch as clean.  The serving demo drains the same batched
 engine twice — clean and noisy — to show noise-faithful serving.
 
+The KWN cell additionally demonstrates **silicon-in-the-loop fine-tuning**
+(the reduced Fig. 8 robustness experiment): after the software pre-train,
+``--silicon-steps`` noise-aware QAT steps run *through* the fused kernel
+(forward = the serving kernel under the Fig. 7 error model with a fresh
+counter seed per step; backward = the surrogate BPTT Pallas kernel), and
+the clean/noisy fused accuracies are printed before and after — the point
+being that training against the silicon's own noise closes the
+clean->noisy gap the software-trained model pays at serving time.
+
     PYTHONPATH=src python examples/train_snn_events.py [--steps 150]
+        [--silicon-steps 60]
 """
 
 import argparse
@@ -24,6 +34,10 @@ from repro.serve.engine import EventRequest, SNNEventEngine
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--silicon-steps", type=int, default=60,
+                    help="noise-aware QAT fine-tune steps through the fused "
+                         "kernel (KWN mode; 0 disables the stage)")
+    ap.add_argument("--silicon-lr", type=float, default=0.02)
     ap.add_argument("--dataset", default="nmnist",
                     choices=list(ev_lib.DATASETS))
     ap.add_argument("--serve-requests", type=int, default=96,
@@ -32,6 +46,7 @@ def main():
 
     ds = ev_lib.EventDataset(ev_lib.DATASETS[args.dataset])
     dcfg = ev_lib.DATASETS[args.dataset]
+    noise_model = ima.IMANoiseModel()
 
     for mode in ("kwn", "nld"):
         cfg = snn.SNNConfig(n_in=dcfg.n_in, n_steps=dcfg.n_steps,
@@ -39,7 +54,7 @@ def main():
                             k=12 if args.dataset == "dvs_gesture" else 3)
         p, losses = snn.train(cfg, ds, n_steps=args.steps, batch=64)
         acc_n, _ = snn.evaluate(p, cfg, ds, jax.random.PRNGKey(1),
-                                n_batches=4, noise=ima.IMANoiseModel(),
+                                n_batches=4, noise=noise_model,
                                 fused=True)
         acc_f, tele_f = snn.evaluate(p, cfg, ds, jax.random.PRNGKey(1),
                                      n_batches=4, fused=True)
@@ -49,11 +64,31 @@ def main():
               f"mean ADC steps {tele_f['adc_steps']:.1f}/31  "
               f"LIF updates/step {tele_f['lif_updates']:.0f}/128")
 
+        if mode == "kwn" and args.silicon_steps:
+            # Silicon-in-the-loop fine-tune: train against the fused kernel
+            # under the Fig. 7 error model (fresh counter seed per step).
+            p_ft, ft_losses = snn.train(
+                cfg, ds, n_steps=args.silicon_steps, batch=64,
+                lr=args.silicon_lr, seed=5, silicon=True,
+                noise=noise_model, params=p)
+            ft_clean, _ = snn.evaluate(p_ft, cfg, ds, jax.random.PRNGKey(1),
+                                       n_batches=4, fused=True)
+            ft_noisy, _ = snn.evaluate(p_ft, cfg, ds, jax.random.PRNGKey(1),
+                                       n_batches=4, noise=noise_model,
+                                       fused=True)
+            print(f"  silicon fine-tune ({args.silicon_steps} steps, "
+                  f"noise-aware QAT): loss "
+                  f"{ft_losses[0]:.3f}->{ft_losses[-1]:.3f}  "
+                  f"clean {acc_f:.3f}->{ft_clean:.3f}  "
+                  f"noisy {acc_n:.3f}->{ft_noisy:.3f}  "
+                  f"(gap {acc_f - acc_n:+.3f} -> "
+                  f"{ft_clean - ft_noisy:+.3f})")
+            p = p_ft   # serve the silicon-tuned model below
+
         if mode == "kwn" and args.serve_requests:
             key = jax.random.PRNGKey(7)
             ev, lab = ds.sample(key, args.serve_requests)
-            for tag, noise in (("clean", None), ("noisy",
-                                                ima.IMANoiseModel())):
+            for tag, noise in (("clean", None), ("noisy", noise_model)):
                 engine = SNNEventEngine(cfg, p, batch_slots=32, noise=noise)
                 for i in range(args.serve_requests):
                     engine.submit(EventRequest(uid=i, events=ev[i],

@@ -333,6 +333,60 @@ def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
     return v_out, spk, mask, steps, mac
 
 
+def fused_seq_vjp(spikes: jax.Array, w: jax.Array, scale: jax.Array,
+                  cfg: CIMMacroConfig, v: jax.Array, *, k: int = 12,
+                  drive_gain: float = 1.0, beta: float = 0.9,
+                  v_th1: float = 1.0, v_th2: float = 0.6,
+                  v_reset: float = 0.0, v_lim: float = 8.0,
+                  use_snl: bool = True, noise: jax.Array | None = None,
+                  snl_amp: float = 0.0, kwn_relax: float = 0.0,
+                  surrogate_beta: float = 4.0, remat: bool = False,
+                  gate: bool = True, seed=0.0):
+    """Differentiable fused KWN sequence: the silicon-in-the-loop training
+    forward, with the surrogate backward running as a Pallas kernel.
+
+    spikes: (T, ..., I) event stream in {-1, 0, +1} (no gradient).
+    w:      (I, N) f32 weight in *integer MAC units* — gradients flow to it
+            straight through the twin-cell rounding; callers apply their
+            own ternary-STE clip at the model layer (``repro.train.silicon``
+            does, mirroring ``ternary.quantize_weights_ste``).
+    scale:  (N,) per-column weight scale (stop-gradient semantics — the
+            tangent treats it as a constant, like the software QAT path).
+    cfg:    the macro config; ``cfg.ima_noise`` turns on the in-kernel
+            Fig. 7 error model (noise-aware QAT) keyed on ``seed`` — pass a
+            fresh ``seed`` per optimization step so every step sees a fresh
+            silicon-noise draw.
+    noise:  (T, ..., N) pre-drawn SNL noise for the *clean* path (PRBS
+            parity with serving); None selects the in-kernel counter SNL
+            stream at ``snl_amp`` on the noisy path (or no noise at all
+            when ``use_snl`` is off).
+    kwn_relax / surrogate_beta / remat: surrogate-backward knobs — loser
+            gradient leak through the hard winner gate, SuperSpike
+            sharpness, and the MAC residual-vs-recompute memory policy
+            (see ``kernels.fused_macro_grad``).
+    seed:   f32 scalar (traced) keying both counter noise streams.
+
+    Returns (spikes_out (T, ..., N), v_out (..., N)), both differentiable.
+    """
+    from repro.kernels import ops as kernel_ops
+    _, nlq = _codebooks(cfg)
+    ima_kn = None
+    if cfg.ima_noise is not None:
+        ima_kn = ima_lib.kernel_noise_params(cfg.ima_noise, nlq)
+    spec = kernel_ops.SeqVJPSpec(
+        k=k, drive_gain=drive_gain, beta=beta, v_th1=v_th1, v_th2=v_th2,
+        v_reset=v_reset, v_lim=v_lim, use_snl=use_snl, ima_noise=ima_kn,
+        snl_amp=snl_amp, kwn_relax=kwn_relax, surrogate_beta=surrogate_beta,
+        ste_lo=float(-cfg.mac_range - 0.5), ste_hi=float(cfg.mac_range + 0.5),
+        remat=remat, gate=gate, has_noise=noise is not None)
+    s = ternary_lib.ternary_input_encode(spikes)
+    noise_arr = jnp.zeros((1,), jnp.float32) if noise is None else noise
+    return kernel_ops.fused_macro_seq_vjp(
+        spec, w, s, nlq.boundaries, nlq.levels,
+        scale.reshape(-1).astype(jnp.float32), v, noise_arr,
+        jnp.asarray(seed, jnp.float32))
+
+
 def tiled_cim_mac(spikes: jax.Array, w_int: jax.Array,
                   cfg: CIMMacroConfig) -> tuple[jax.Array, MacroGeometry]:
     """Large-layer path: tile (I, N) onto the 256x128 macro grid.

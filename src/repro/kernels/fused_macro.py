@@ -344,14 +344,20 @@ def _kwn_sweep(codes: jax.Array, k: int, n_codes: int, bounded: bool = False):
 
 def _lif_update(v, drive, mask, noise, *, beta, v_th1, v_th2, v_reset, v_lim,
                 use_snl):
-    """Eq. (1): winners leak+integrate, non-winners hold; SNL kick; compare."""
+    """Eq. (1): winners leak+integrate, non-winners hold; SNL kick; compare.
+
+    Returns (v_out, spike, v_clip): ``v_clip`` is the post-saturation,
+    pre-reset membrane — the value the spike comparator actually reads.
+    Training saves it per step (``train_trace``) because the SuperSpike
+    surrogate and the saturation gradient gate are both functions of it.
+    """
     v_new = jnp.where(mask > 0, beta * v + drive, v)
     if use_snl:
         snl = (v_new > v_th2) & (v_new < v_th1)
         v_new = jnp.where(snl, v_new + noise, v_new)
     v_new = jnp.clip(v_new, -v_lim, v_lim)      # 12-bit register saturation
     spike = (v_new >= v_th1).astype(jnp.float32)
-    return jnp.where(spike > 0, v_reset, v_new), spike
+    return jnp.where(spike > 0, v_reset, v_new), spike, v_new
 
 
 def _mask_padded_columns(codes: jax.Array, n_valid: int) -> jax.Array:
@@ -401,12 +407,13 @@ def _lif_noise(noise_ref, rest_shape, seed, step, *, row0, logical_n,
     return jnp.float32(snl_amp) * sign
 
 
-def _unpack_refs(refs, *, gated, has_noise_ref, has_w_dend, mac_out):
+def _unpack_refs(refs, *, gated, has_noise_ref, has_w_dend, mac_out,
+                 train_trace=False):
     """Positional-ref unpacking shared by both mode kernels.
 
     Ref order is (scalar prefetch), inputs, outputs, scratch:
     ``[occ?] x msb lsb bounds levels scale ctl [w_dend?] v0 [noise?]
-    [mac(out)?] v spike mask steps [mac(scratch)?]``.
+    [mac(out)?] v spike mask steps [vtrace?] [mac(scratch)?]``.
     """
     refs = list(refs)
     occ_ref = refs.pop(0) if gated else None
@@ -417,12 +424,14 @@ def _unpack_refs(refs, *, gated, has_noise_ref, has_w_dend, mac_out):
     ins = dict(zip(names, refs[:len(names)]))
     rest = refs[len(names):]
     noise_ref = rest.pop(0) if has_noise_ref else None
-    if mac_out:
-        mac_ref, v_ref, spike_ref, mask_ref, steps_ref = rest
-    else:
-        v_ref, spike_ref, mask_ref, steps_ref, mac_ref = rest
+    mac_ref = rest.pop(0) if mac_out else None
+    v_ref, spike_ref, mask_ref, steps_ref = rest[:4]
+    rest = rest[4:]
+    vtrace_ref = rest.pop(0) if train_trace else None
+    if not mac_out:
+        mac_ref = rest.pop(0)                    # VMEM scratch accumulator
     return (occ_ref, ins, noise_ref, mac_ref, v_ref, spike_ref, mask_ref,
-            steps_ref)
+            steps_ref, vtrace_ref)
 
 
 def _block_occupancy(occ_ref, *, i, t, kk, n_i, n_k):
@@ -435,11 +444,12 @@ def _block_occupancy(occ_ref, *, i, t, kk, n_i, n_k):
 def _seq_kwn_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_valid, k,
                     n_codes, beta, v_th1, v_th2, v_reset, v_lim, use_snl,
                     drive_gain, ima_noise, snl_amp, logical_n, has_noise_ref,
-                    gated, mac_out):
+                    gated, mac_out, train_trace):
     (occ_ref, ins, noise_ref, mac_ref, v_ref, spike_ref, mask_ref,
-     steps_ref) = _unpack_refs(refs, gated=gated,
-                               has_noise_ref=has_noise_ref,
-                               has_w_dend=False, mac_out=mac_out)
+     steps_ref, vtrace_ref) = _unpack_refs(refs, gated=gated,
+                                           has_noise_ref=has_noise_ref,
+                                           has_w_dend=False, mac_out=mac_out,
+                                           train_trace=train_trace)
     x_ref, msb_ref, lsb_ref = ins["x"], ins["msb"], ins["lsb"]
     bounds_ref, levels_ref = ins["bounds"], ins["levels"]
     scale_ref, ctl_ref, v0_ref = ins["scale"], ins["ctl"], ins["v0"]
@@ -476,13 +486,15 @@ def _seq_kwn_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_valid, k,
         drive = recon * scale_ref[...] * maskf * drive_gain
         nz = _lif_noise(noise_ref, v_ref.shape, seed, step, row0=row0,
                         logical_n=logical_n, snl_amp=snl_amp, use_snl=use_snl)
-        v_new, spike = _lif_update(
+        v_new, spike, v_clip = _lif_update(
             v_ref[...], drive, maskf, nz, beta=beta, v_th1=v_th1,
             v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
         v_ref[...] = v_new
         spike_ref[0] = spike
         mask_ref[0] = maskf
         steps_ref[0] = steps
+        if vtrace_ref is not None:
+            vtrace_ref[0] = v_clip
 
 
 def _seq_nld_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_codes,
@@ -490,9 +502,9 @@ def _seq_nld_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_codes,
                     drive_gain, ima_noise, logical_n, has_noise_ref, gated,
                     mac_out):
     (occ_ref, ins, _, mac_ref, v_ref, spike_ref, mask_ref,
-     steps_ref) = _unpack_refs(refs, gated=gated,
-                               has_noise_ref=has_noise_ref,
-                               has_w_dend=True, mac_out=mac_out)
+     steps_ref, _) = _unpack_refs(refs, gated=gated,
+                                  has_noise_ref=has_noise_ref,
+                                  has_w_dend=True, mac_out=mac_out)
     x_ref, msb_ref, lsb_ref = ins["x"], ins["msb"], ins["lsb"]
     bounds_ref, levels_ref = ins["bounds"], ins["levels"]
     scale_ref, ctl_ref = ins["scale"], ins["ctl"]
@@ -527,7 +539,7 @@ def _seq_nld_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_codes,
         w_dend = w_dend_ref[...]                          # (J, N)
         drive = jnp.sum(act3 * w_dend[None, :, :], axis=1) * drive_gain
         ones = jnp.ones((bm_rows, n), jnp.float32)        # dense LIF update
-        v_new, spike = _lif_update(
+        v_new, spike, _ = _lif_update(
             v_ref[...], drive, ones, jnp.zeros((bm_rows, n), jnp.float32),
             beta=beta, v_th1=v_th1, v_th2=v_th2, v_reset=v_reset,
             v_lim=v_lim, use_snl=False)
@@ -544,7 +556,7 @@ def _seq_nld_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_codes,
 @functools.partial(jax.jit, static_argnames=(
     "mode", "k", "ratio", "drive_gain", "use_snl", "bm", "bk", "bn",
     "n_valid", "ima_noise", "snl_amp", "logical_n", "mac_telemetry",
-    "interpret") + _LIF_STATICS)
+    "train_trace", "interpret") + _LIF_STATICS)
 def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                     boundaries: jax.Array, levels: jax.Array,
                     scale: jax.Array, v: jax.Array,
@@ -559,7 +571,7 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                     bk: int = DEFAULT_BK, bn: int | None = None,
                     n_valid: int | None = None, ima_noise=None,
                     snl_amp: float = 0.0, logical_n: int | None = None,
-                    mac_telemetry: bool = True,
+                    mac_telemetry: bool = True, train_trace: bool = False,
                     seed=0, step_offset=0, interpret: bool = True):
     """A whole fused event sequence: T macro time steps in one kernel.
 
@@ -607,12 +619,19 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                  scratch: nothing but the per-step (spikes, mask,
                  adc_steps) leaves the kernel — the serving default — and
                  the returned mac is None.
+    train_trace: additionally emit the per-step membrane trace vtrace
+                 (T, M, N) — the post-saturation, pre-reset V_mem the spike
+                 comparator reads.  This is the residual the surrogate
+                 backward (``kernels.fused_macro_grad``) consumes: the
+                 SuperSpike derivative and the saturation gradient gate are
+                 both functions of it.  KWN mode only.
     seed:        traced int32 scalar keying both noise streams.
     step_offset: traced int32 added to the grid time index (lets the
                  per-step launch cadence keep the seq-identical stream).
 
     Returns (mac (T, M, NC) f32 or None, v_out (M, N) f32,
-    spikes (T, M, N) f32, mask (T, M, N) f32, adc_steps (T, M, 1) i32).
+    spikes (T, M, N) f32, mask (T, M, N) f32, adc_steps (T, M, 1) i32),
+    plus a trailing vtrace (T, M, N) f32 element when ``train_trace``.
     """
     t_steps, m, kdim = x.shape
     kdim2, nc = msb.shape
@@ -669,8 +688,9 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
             use_snl=use_snl, drive_gain=drive_gain, ima_noise=ima_noise,
             snl_amp=snl_amp, logical_n=logical_n,
             has_noise_ref=has_noise_ref, gated=gated,
-            mac_out=mac_telemetry)
+            mac_out=mac_telemetry, train_trace=train_trace)
     elif mode == "nld":
+        assert not train_trace, "train_trace is KWN-only (silicon training)"
         assert w_dend is not None and nc % n == 0, (nc, n)
         n_branches = nc // n
         assert w_dend.shape == (n_branches, n)
@@ -703,6 +723,10 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
         jax.ShapeDtypeStruct((t_steps, m, n), jnp.float32),
         jax.ShapeDtypeStruct((t_steps, m, 1), jnp.int32),
     ]
+    if train_trace:
+        out_specs.append(step_spec((1, bm, n)))          # membrane trace
+        out_shape.append(
+            jax.ShapeDtypeStruct((t_steps, m, n), jnp.float32))
     scratch_shapes = []
     if mac_telemetry:
         out_specs.insert(0, step_spec((1, bm, nc)))      # mac telemetry
@@ -731,10 +755,13 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
             scratch_shapes=scratch_shapes,
             interpret=interpret,
         )(*inputs)
-    if mac_telemetry:
-        return outs
+    outs = list(outs)
+    mac = outs.pop(0) if mac_telemetry else None
+    if train_trace:
+        v_out, spikes, mask, steps, vtrace = outs
+        return mac, v_out, spikes, mask, steps, vtrace
     v_out, spikes, mask, steps = outs
-    return None, v_out, spikes, mask, steps
+    return mac, v_out, spikes, mask, steps
 
 
 def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,

@@ -7,11 +7,15 @@ hardware set ``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False).
 
 from __future__ import annotations
 
+import functools
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import ternary as _ternary
 from repro.kernels import fused_macro as _fused
+from repro.kernels import fused_macro_grad as _fused_grad
 from repro.kernels import kwn_topk as _kwn
 from repro.kernels import lif_step as _lif
 from repro.kernels import nlq_lut as _nlq
@@ -126,8 +130,8 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
                     bk: int | None = None, bn: int | None = None,
                     ima_noise=None, snl_amp: float = 0.0,
                     gate: bool = True, activity=None,
-                    mac_telemetry: bool = True, seed=0,
-                    step_offset=0):
+                    mac_telemetry: bool = True, train_trace: bool = False,
+                    seed=0, step_offset=0):
     """Batched time-major fused sequence; x (T, ..., K), v (..., N),
     noise (T, ..., N) or None for in-kernel counter noise.
 
@@ -155,8 +159,14 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
     draw.  ``noise=None`` with ``snl_amp > 0`` generates the SNL sign noise
     in-kernel as well — the noisy path streams no per-step tensors at all.
 
+    ``train_trace=True`` (KWN only) appends the per-step membrane trace
+    vtrace (T, ..., N) — the post-saturation, pre-reset V_mem — to the
+    return tuple; it is the residual the surrogate backward kernel
+    (``fused_macro_grad``) consumes.
+
     Returns (mac (T, ..., NC) or None, v_out (..., N), spikes (T, ..., N),
-    mask (T, ..., N), adc_steps (T, ...)).
+    mask (T, ..., N), adc_steps (T, ...)), plus vtrace (T, ..., N) when
+    ``train_trace``.
     """
     t = x.shape[0]
     lead = x.shape[1:-1]
@@ -187,23 +197,27 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
     w_dend_p = w_dend
     if w_dend is not None and plan.n_pad != n:
         w_dend_p = jnp.pad(w_dend, ((0, 0), (0, plan.n_pad - n)))
-    mac, v_out, spikes, mask, steps = _fused.fused_macro_seq(
+    outs = _fused.fused_macro_seq(
         xm, msb_p, lsb_p, boundaries, levels, scale_p, vm, nm, w_dend_p,
         activity,
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
         use_snl=use_snl, bm=plan.bm, bk=plan.bk, bn=plan.bn,
         n_valid=plan.n_valid, ima_noise=ima_noise, snl_amp=snl_amp,
-        logical_n=n, mac_telemetry=mac_telemetry, seed=seed,
-        step_offset=step_offset, interpret=INTERPRET)
+        logical_n=n, mac_telemetry=mac_telemetry, train_trace=train_trace,
+        seed=seed, step_offset=step_offset, interpret=INTERPRET)
+    mac, v_out, spikes, mask, steps = outs[:5]
     if mac is not None:
         mac = _unpad_cols(mac[:, :m0], n, plan.n_pad, n_branches)
         mac = mac.reshape(t, *lead, nc)
-    return (mac,
-            v_out[:m0, :n].reshape(*lead, n),
-            spikes[:, :m0, :n].reshape(t, *lead, n),
-            mask[:, :m0, :n].reshape(t, *lead, n),
-            steps[:, :m0, 0].reshape(t, *lead))
+    ret = (mac,
+           v_out[:m0, :n].reshape(*lead, n),
+           spikes[:, :m0, :n].reshape(t, *lead, n),
+           mask[:, :m0, :n].reshape(t, *lead, n),
+           steps[:, :m0, 0].reshape(t, *lead))
+    if train_trace:
+        ret += (outs[5][:, :m0, :n].reshape(t, *lead, n),)
+    return ret
 
 
 def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise=None,
@@ -236,6 +250,151 @@ def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise=None,
         step_offset=step_offset)
     return (None if mac is None else mac[0], v_out, spikes[0], mask[0],
             steps[0])
+
+
+# ---------------------------------------------------------------------------
+# Differentiable fused sequence: the silicon-in-the-loop training primitive
+# ---------------------------------------------------------------------------
+
+class SeqVJPSpec(NamedTuple):
+    """Static (hashable) configuration of ``fused_macro_seq_vjp``.
+
+    Mirrors the fused forward's static kwargs plus the surrogate-backward
+    knobs: ``kwn_relax`` (loser gradient leak through the hard winner gate),
+    ``surrogate_beta`` (SuperSpike sharpness), ``ste_lo``/``ste_hi`` (the
+    IMA ramp's straight-through window, in the ramp's input units), and
+    ``remat`` (recompute the MAC in the backward instead of saving the
+    (T, M, NC) residual stack — bit-identical gradients, see
+    ``fused_macro_grad``).  ``has_noise`` says whether the streamed noise
+    operand is live (clean-path PRBS SNL) or a dummy (in-kernel counter
+    noise / SNL off).
+    """
+
+    k: int = 12
+    ratio: float = 2.0
+    drive_gain: float = 1.0
+    beta: float = 0.9
+    v_th1: float = 1.0
+    v_th2: float = 0.6
+    v_reset: float = 0.0
+    v_lim: float = 8.0
+    use_snl: bool = True
+    ima_noise: object = None          # ima.IMAKernelNoise | None (hashable)
+    snl_amp: float = 0.0
+    kwn_relax: float = 0.0
+    surrogate_beta: float = 4.0
+    ste_lo: float = -24.5
+    ste_hi: float = 24.5
+    remat: bool = False
+    gate: bool = True
+    has_noise: bool = False
+    bm: int | None = None
+    bk: int | None = None
+    bn: int | None = None
+
+
+def _seq_vjp_forward(spec: SeqVJPSpec, w, x, boundaries, levels, scale, v,
+                     noise, seed_f):
+    """Silicon-exact forward: quantize ``w`` onto the twin-cell planes and
+    run the fused kernel with the training residual outputs enabled."""
+    msb, lsb = _ternary.weight_decompose(w)
+    seed = seed_f.astype(jnp.int32)
+    noise_arr = noise if spec.has_noise else None
+    mac, v_out, spikes, mask, _, vtrace = fused_macro_seq(
+        x, _ternary.pack_ternary(msb), _ternary.pack_ternary(lsb),
+        boundaries, levels, scale, v, noise_arr, None,
+        mode="kwn", k=spec.k, ratio=spec.ratio, drive_gain=spec.drive_gain,
+        beta=spec.beta, v_th1=spec.v_th1, v_th2=spec.v_th2,
+        v_reset=spec.v_reset, v_lim=spec.v_lim, use_snl=spec.use_snl,
+        bm=spec.bm, bk=spec.bk, bn=spec.bn, ima_noise=spec.ima_noise,
+        snl_amp=spec.snl_amp, gate=spec.gate,
+        mac_telemetry=not spec.remat, train_trace=True, seed=seed)
+    return (spikes, v_out), (w, x, scale, mask, vtrace, mac, noise)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def fused_macro_seq_vjp(spec: SeqVJPSpec, w, x, boundaries, levels, scale,
+                        v, noise, seed_f):
+    """``fused_macro_seq`` with a surrogate backward (KWN mode).
+
+    The forward is the silicon-exact fused kernel — clean or counter-PRNG
+    noisy, activity-gated — bitwise-equal to ``ref.fused_macro_seq_ref``;
+    the backward is the time-reversed BPTT Pallas kernel
+    (``fused_macro_grad.fused_macro_seq_grad``), whose gradient semantics
+    are pinned by ``jax.grad`` of ``ref.fused_macro_seq_vjp_ref``.
+
+    w:      (K, N) f32 weight in *integer MAC units* (values on the twin-
+            cell [-3, 3] grid; non-grid values are rounded in the primal
+            and straight-through in the tangent — callers put their own
+            ternary-STE clip at the model layer).
+    x:      (T, ..., K) f32 ternary events (no gradient; zero cotangent).
+    v:      (..., N) f32 initial membrane (dv0 is returned).
+    noise:  (T, ..., N) f32 streamed SNL noise when ``spec.has_noise``,
+            else a dummy array (any shape).
+    seed_f: f32 scalar counter-PRNG seed (< 2^24; kept float so the
+            cotangent machinery never meets an integer primal).
+
+    Returns (spikes (T, ..., N), v_out (..., N)).
+    """
+    out, _ = _seq_vjp_forward(spec, w, x, boundaries, levels, scale, v,
+                              noise, seed_f)
+    return out
+
+
+def _seq_vjp_fwd(spec, w, x, boundaries, levels, scale, v, noise, seed_f):
+    out, res = _seq_vjp_forward(spec, w, x, boundaries, levels, scale, v,
+                                noise, seed_f)
+    return out, res + (boundaries, levels)
+
+
+def _seq_vjp_bwd(spec, res, cts):
+    w, x, scale, mask, vtrace, mac, noise, boundaries, levels = res
+    g_spk, g_vout = cts
+    t = x.shape[0]
+    lead = x.shape[1:-1]
+    kdim = x.shape[-1]
+    n = vtrace.shape[-1]
+    xm = x.reshape(t, -1, kdim)
+    m0 = xm.shape[1]
+    plan = _fused.plan_tiles(m0, kdim, n, n, t, mode="kwn",
+                             bm=spec.bm, bk=spec.bk, bn=spec.bn)
+    xm = jnp.pad(xm, ((0, 0), (0, plan.m_pad - m0),
+                      (0, plan.k_pad - kdim)))
+    pad_n = [(0, 0), (0, plan.m_pad - m0), (0, plan.n_pad - n)]
+    stack = lambda a: jnp.pad(a.reshape(t, m0, n), pad_n)
+    g_spk_p = stack(g_spk)
+    vtrace_p = stack(vtrace)
+    mask_p = stack(mask)
+    g_vfin_p = jnp.pad(g_vout.reshape(m0, n), pad_n[1:])
+    scale_p = jnp.pad(scale.reshape(-1), (0, plan.n_pad - n)).reshape(1, -1)
+    activity = None
+    if spec.gate:
+        activity = fused_activity_map(xm, plan).any(axis=2).astype(jnp.int32)
+    if spec.remat:
+        msb, lsb = _ternary.weight_decompose(w)
+        msb_p = jnp.pad(msb, ((0, plan.k_pad - kdim), (0, plan.n_pad - n)))
+        lsb_p = jnp.pad(lsb, ((0, plan.k_pad - kdim), (0, plan.n_pad - n)))
+        mac_p = None
+    else:
+        msb_p = lsb_p = None
+        mac_p = stack(mac)
+    dw_p, dv0_p = _fused_grad.fused_macro_seq_grad(
+        xm, scale_p, g_spk_p, g_vfin_p, vtrace_p, mask_p, mac_p,
+        None if msb_p is None else _ternary.pack_ternary(msb_p),
+        None if lsb_p is None else _ternary.pack_ternary(lsb_p),
+        activity,
+        ratio=spec.ratio, drive_gain=spec.drive_gain, beta=spec.beta,
+        v_th1=spec.v_th1, v_lim=spec.v_lim, kwn_relax=spec.kwn_relax,
+        surrogate_beta=spec.surrogate_beta, ste_lo=spec.ste_lo,
+        ste_hi=spec.ste_hi, bm=plan.bm, bn=plan.bn, interpret=INTERPRET)
+    dw = dw_p[:kdim, :n]
+    dv0 = dv0_p[:m0, :n].reshape(*lead, n)
+    return (dw, jnp.zeros_like(x), jnp.zeros_like(boundaries),
+            jnp.zeros_like(levels), jnp.zeros_like(scale), dv0,
+            jnp.zeros_like(noise), jnp.zeros((), jnp.float32))
+
+
+fused_macro_seq_vjp.defvjp(_seq_vjp_fwd, _seq_vjp_bwd)
 
 
 def nlq_convert(x, boundaries, levels):

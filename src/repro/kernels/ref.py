@@ -12,6 +12,7 @@ import jax.numpy as jnp
 from repro.core import ctrprng
 from repro.core import ima as ima_lib
 from repro.core import kwn as kwn_lib
+from repro.core import ternary as ternary_lib
 
 
 def _noise_ids(shape):
@@ -252,3 +253,174 @@ def fused_macro_seq_ref(x, msb, lsb, boundaries, levels, scale, v,
     xs = (t_ix, x) if noise is None else (t_ix, x, noise)
     v_fin, (mac_t, spk_t, mask_t, steps_t) = jax.lax.scan(step, v, xs)
     return mac_t, v_fin, spk_t, mask_t, steps_t
+
+
+# ---------------------------------------------------------------------------
+# Differentiable oracle: the surrogate-backward reference (silicon training)
+# ---------------------------------------------------------------------------
+#
+# ``fused_macro_seq_vjp_ref`` is the *gradient semantics* oracle for the
+# silicon-in-the-loop training subsystem: a pure-JAX function whose primal
+# outputs are bitwise-equal to ``fused_macro_seq_ref`` (and therefore to the
+# fused Pallas kernel) and whose ``jax.grad`` defines the reference surrogate
+# gradient the Pallas backward kernel (``kernels.fused_macro_grad``) must
+# reproduce.  The surrogate chain, expressed through STE-identity terms
+# (``primal_exact + (surrogate - stop_grad(surrogate))`` — exactly zero in
+# the primal, the surrogate's derivative in the tangent):
+#
+#   * **ternary MAC**: the tangent of the integer-unit MAC is ``x @ w`` (the
+#     caller's float weight, straight through the round-to-ternary);
+#   * **IMA ramp + LUT**: straight-through inside the ramp's representable
+#     range (``[ste_lo, ste_hi]`` = levels span +-0.5 LSB, the same
+#     saturation window ``ima._ima_ste_bwd`` uses); the Fig. 7 noise draws
+#     perturb the primal codes only — the tangent passes through the clean
+#     analog MAC;
+#   * **KWN winner mask**: a hard gate with a *relaxed* STE — winners pass
+#     gradient at weight 1, losers leak it at ``kwn_relax`` (the gradient a
+#     loser would have received had it won, scaled down; ``kwn_relax=0`` is
+#     the pure hard gate);
+#   * **LIF spike**: the SuperSpike fast-sigmoid surrogate at
+#     ``surrogate_beta`` (the same ``core.lif.spike_fn`` derivative);
+#   * **V_mem saturation**: gradient passes strictly inside the register
+#     range (``|v_clip| < v_lim``), and is cut at the rails — defined here
+#     (not via ``jnp.clip``, whose tie-splitting at an exact-rail membrane
+#     has no silicon meaning);
+#   * **SNL noise / reset**: additive noise and the reset branch selection
+#     are gradient-transparent and gradient-opaque respectively, exactly as
+#     in the software BPTT path.
+
+
+def _ste(exact: jax.Array, surrogate: jax.Array) -> jax.Array:
+    """Primal = ``exact`` (bitwise); tangent = the surrogate's."""
+    return jax.lax.stop_gradient(exact) + (
+        surrogate - jax.lax.stop_gradient(surrogate))
+
+
+@jax.custom_vjp
+def _spike_surrogate(v: jax.Array, v_th: jax.Array,
+                     sbeta: jax.Array) -> jax.Array:
+    return (v >= v_th).astype(jnp.float32)
+
+
+def _spike_surrogate_fwd(v, v_th, sbeta):
+    return _spike_surrogate(v, v_th, sbeta), (v, v_th, sbeta)
+
+
+def _spike_surrogate_bwd(res, g):
+    v, v_th, sbeta = res
+    x = sbeta * (v - v_th)
+    sg = sbeta / (1.0 + jnp.abs(x)) ** 2          # SuperSpike fast sigmoid
+    return g * sg, jnp.zeros_like(v_th), jnp.zeros_like(sbeta)
+
+
+_spike_surrogate.defvjp(_spike_surrogate_fwd, _spike_surrogate_bwd)
+
+
+@jax.custom_vjp
+def _sat_clip(v: jax.Array, lim: jax.Array) -> jax.Array:
+    """V_mem register saturation with a hard gradient cut at the rails.
+
+    ``jnp.clip`` splits the cotangent 50/50 when the membrane lands exactly
+    on a rail (lax.min/max balanced-tie JVP); the register has no such
+    half-gradient state, so the backward here passes iff strictly inside."""
+    return jnp.clip(v, -lim, lim)
+
+
+def _sat_clip_fwd(v, lim):
+    out = _sat_clip(v, lim)
+    return out, (out, lim)
+
+
+def _sat_clip_bwd(res, g):
+    v_clip, lim = res
+    inside = (jnp.abs(v_clip) < lim).astype(g.dtype)
+    return g * inside, jnp.zeros_like(lim)
+
+
+_sat_clip.defvjp(_sat_clip_fwd, _sat_clip_bwd)
+
+
+def fused_macro_seq_vjp_ref(w, x, boundaries, levels, scale, v,
+                            noise=None, *, k: int = 12, ratio: float = 2.0,
+                            drive_gain: float = 1.0, beta: float = 0.9,
+                            v_th1: float = 1.0, v_th2: float = 0.6,
+                            v_reset: float = 0.0, v_lim: float = 8.0,
+                            use_snl: bool = True, ima_noise=None,
+                            snl_amp: float = 0.0, seed=0, step_offset=0,
+                            kwn_relax: float = 0.0,
+                            surrogate_beta: float = 4.0,
+                            ste_lo: float | None = None,
+                            ste_hi: float | None = None):
+    """Differentiable time-major oracle for the fused KWN sequence.
+
+    ``w`` is the *float* weight in integer MAC units (the primal rounds it
+    onto the twin-cell [-3, 3] grid exactly like the packers, so passing an
+    already-integer ``w`` reproduces ``fused_macro_seq_ref(x, msb, lsb, ...)``
+    bitwise); gradients flow to ``w`` and ``v`` through the surrogate chain
+    documented above.  ``x`` is the (T, M, K) ternary input as f32 (events
+    carry no gradient).  ``ste_lo``/``ste_hi`` bound the straight-through
+    window of the IMA ramp (default: levels span +-0.5 LSB).
+
+    Returns (v_fin, spikes (T, M, N), mask (T, M, N), adc_steps (T, M, 1),
+    vtrace (T, M, N)) — the same per-step stacks the training forward saves,
+    with vtrace the pre-reset saturated membrane.
+    """
+    sg = jax.lax.stop_gradient
+    w_int = ternary_lib.weight_decompose(sg(w))
+    w_exact = ternary_lib.weight_compose(*w_int, ratio=ratio)
+    cb = ima_lib.RampCodebook(
+        levels=jnp.asarray(levels, jnp.float32),
+        boundaries=jnp.asarray(boundaries, jnp.float32),
+        in_lo=0.0, in_hi=0.0)
+    if ste_lo is None:
+        ste_lo = float(jnp.min(cb.levels)) - 0.5
+    if ste_hi is None:
+        ste_hi = float(jnp.max(cb.levels)) + 0.5
+    sbeta = jnp.float32(surrogate_beta)
+    lim = jnp.float32(v_lim)
+
+    def step(v_carry, inp):
+        t, xt = inp[0], inp[1]
+        nzt = inp[2] if noise is not None else None
+        mac_e = xt @ w_exact                       # exact integer-unit MAC
+        mac = _ste(mac_e, xt @ w)
+        codes = ima_lib.ima_convert(sg(mac_e), cb)
+        if ima_noise is not None:
+            rows, cols = _noise_ids(mac_e.shape)
+            codes = ctrprng.noisy_ima_codes(codes, sg(mac_e), rows, cols,
+                                            seed, step_offset + t, ima_noise,
+                                            cb.n_codes)
+            mac_rank = ima_lib.ima_reconstruct(codes, cb)
+        else:
+            mac_rank = sg(mac_e)
+        res = kwn_lib.kwn_select(mac_rank, k, cb)
+        maskf, steps = sg(res.mask), res.adc_steps[..., None]
+        recon = ima_lib.ima_reconstruct(codes, cb)
+        drive_exact = recon * scale * maskf * drive_gain
+        rng = sg(((mac_e >= ste_lo) & (mac_e <= ste_hi))
+                 .astype(jnp.float32))             # ramp saturation window
+        drive_sur = mac * sg(scale) * drive_gain * rng
+        drive_w = _ste(drive_exact, drive_sur)
+        if kwn_relax != 0.0:
+            leak = kwn_relax * drive_sur
+            v_lose = v_carry + (leak - sg(leak))   # exactly v in the primal
+        else:
+            v_lose = v_carry
+        v2 = jnp.where(maskf > 0, beta * v_carry + drive_w, v_lose)
+        if use_snl:
+            if nzt is None:
+                nz = counter_snl_noise(v2.shape, seed, step_offset + t,
+                                       snl_amp)
+            else:
+                nz = nzt
+            snl = (sg(v2) > v_th2) & (sg(v2) < v_th1)
+            v2 = jnp.where(snl, v2 + sg(nz), v2)
+        v_clip = _sat_clip(v2, lim)
+        s = _spike_surrogate(v_clip, jnp.float32(v_th1), sbeta)
+        v_next = jnp.where(sg(s) > 0, v_reset, v_clip)
+        return v_next, (s, maskf, steps, v_clip)
+
+    t_ix = jnp.arange(x.shape[0], dtype=jnp.int32)
+    xs = (t_ix, x) if noise is None else (t_ix, x, noise)
+    v_fin, (spk_t, mask_t, steps_t, vtrace_t) = jax.lax.scan(step, v, xs)
+    return v_fin, spk_t, mask_t, steps_t, vtrace_t

@@ -409,38 +409,94 @@ def nlq_steps_full(cfg: SNNConfig) -> int:
 # Training
 # ---------------------------------------------------------------------------
 
-def loss_fn(p, events, labels, cfg: SNNConfig):
-    logits = forward_train(p, events, cfg)
+def loss_fn(p, events, labels, cfg: SNNConfig, seed=None, *,
+            silicon: bool = False, noise: ima_lib.IMANoiseModel | None = None,
+            kwn_relax: float | None = None, remat: bool = False):
+    """Cross-entropy loss; ``silicon=True`` differentiates *through* the
+    fused macro kernel (surrogate backward) instead of the dense-f32
+    software path — see ``repro.train.silicon``.  ``seed`` (f32 scalar)
+    keys the in-kernel counter noise on the silicon path; ``noise`` (the
+    Fig. 7 model) makes it noise-aware QAT."""
+    if silicon:
+        from repro.train import silicon as silicon_lib
+        if kwn_relax is None:
+            kwn_relax = silicon_lib.DEFAULT_KWN_RELAX
+        logits = silicon_lib.forward_logits(
+            p, events, cfg,
+            jnp.float32(0.0) if seed is None else seed,
+            noise=noise, kwn_relax=kwn_relax, remat=remat)
+    else:
+        logits = forward_train(p, events, cfg)
     lse = jax.nn.log_softmax(logits)
     return -jnp.mean(jnp.take_along_axis(lse, labels[:, None], 1))
 
 
-@functools.partial(jax.jit, static_argnames=("cfg",))
-def train_step(p, opt_m, events, labels, cfg: SNNConfig, lr):
-    loss, g = jax.value_and_grad(loss_fn)(p, events, labels, cfg)
+@functools.partial(jax.jit, static_argnames=(
+    "cfg", "silicon", "noise", "kwn_relax", "remat"), donate_argnums=(0, 1))
+def train_step(p, opt_m, events, labels, cfg: SNNConfig, lr, seed=None, *,
+               silicon: bool = False, noise=None, kwn_relax=None,
+               remat: bool = False):
+    """One SGD-momentum step.  ``p``/``opt_m`` are donated: the optimizer
+    state updates in place instead of copying every buffer per step (the
+    donation engages on TPU/GPU; the CPU test container aliases where it
+    can).  Callers must rebind both, as ``train`` does."""
+    loss, g = jax.value_and_grad(loss_fn)(
+        p, events, labels, cfg, seed, silicon=silicon, noise=noise,
+        kwn_relax=kwn_relax, remat=remat)
     opt_m = jax.tree.map(lambda m, gg: 0.9 * m + gg, opt_m, g)
     p = jax.tree.map(lambda pp, m: pp - lr * m, p, opt_m)
     return p, opt_m, loss
 
 
 def train(cfg: SNNConfig, dataset, n_steps: int = 300, batch: int = 64,
-          seed: int = 0, lr: float = 0.05):
+          seed: int = 0, lr: float = 0.05, *, silicon: bool = False,
+          noise: ima_lib.IMANoiseModel | None = None,
+          kwn_relax: float | None = None, remat: bool = False,
+          params=None):
     """Plain SGD-momentum.  NOTE: the quadratic-NLD cell degrades if trained
     far past convergence (ramp-knee gradient spikes), so callers use per-cell
     step budgets (benchmarks/_snn_cache.py) instead of decay/clipping — both
     were tried and slowed the well-behaved cells more than they helped
-    (recorded in EXPERIMENTS.md)."""
+    (recorded in EXPERIMENTS.md).
+
+    ``silicon=True`` trains through the fused macro kernel with the
+    surrogate backward (KWN mode only); with ``noise`` it is noise-aware
+    QAT — every optimization step draws a fresh counter seed, so the model
+    sees a fresh silicon-noise instance per step.  ``params`` warm-starts
+    from an existing parameter tree (the software pre-train -> silicon
+    fine-tune recipe of ``examples/train_snn_events.py``); the tree is
+    copied first because ``train_step`` donates its arguments.
+
+    Losses are accumulated as device arrays and converted once at the end —
+    the old per-step ``float(loss)`` forced a host sync on every iteration,
+    serializing dispatch against compute.
+    """
     key = jax.random.PRNGKey(seed)
-    p = init_params(cfg, key)
+    if params is None:
+        p = init_params(cfg, key)
+    else:
+        p = jax.tree.map(jnp.asarray, params)
+        p = jax.tree.map(lambda x: x + 0, p)   # fresh buffers (donation-safe)
     opt_m = jax.tree.map(jnp.zeros_like, p)
     losses = []
     for i in range(n_steps):
         key, sub = jax.random.split(key)
+        step_seed = None
+        if silicon:
+            # Split the *batch* key further rather than consuming more of
+            # the main stream: the legacy (software-path) batch sequence
+            # for a given seed must stay byte-identical to pre-silicon
+            # runs (cached models, recorded accuracies).
+            from repro.train import silicon as silicon_lib
+            sub, kseed = jax.random.split(sub)
+            step_seed = silicon_lib.step_seed(kseed)
         ev, lab = dataset.sample(sub, batch)
         p, opt_m, loss = train_step(p, opt_m, ev, lab, cfg,
-                                    jnp.float32(lr))
-        losses.append(float(loss))
-    return p, losses
+                                    jnp.float32(lr), step_seed,
+                                    silicon=silicon, noise=noise,
+                                    kwn_relax=kwn_relax, remat=remat)
+        losses.append(loss)                    # device array: no host sync
+    return p, [float(x) for x in jnp.stack(losses)]
 
 
 def evaluate(p, cfg: SNNConfig, dataset, key: jax.Array, n_batches: int = 10,

@@ -1,0 +1,137 @@
+"""Silicon-in-the-loop SNN training: differentiate *through* the fused macro.
+
+``models.snn.train`` historically back-propagated through the dense-f32
+``forward_train`` path: gradients never saw the IMA code quantization, the
+KWN winner mask, the V_mem register saturation, or the Fig. 7 conversion
+noise — so trained models were systematically mis-calibrated for the fused
+silicon path they are served on.  This module closes that loop: the training
+forward IS the serving forward (the fused Pallas kernel, clean or
+counter-PRNG noisy, activity-gated), and the backward is the time-reversed
+surrogate BPTT pass (``kernels.fused_macro_grad``) wired up through
+``jax.custom_vjp`` (``kernels.ops.fused_macro_seq_vjp`` via
+``core.macro.fused_seq_vjp``).
+
+What is exact and what is surrogate
+-----------------------------------
+*Exact (bitwise)*: every primal value — MAC, codes, winner masks, spikes,
+membrane — matches ``ref.fused_macro_seq_ref`` and therefore the serving
+kernel; evaluating a just-trained model on the silicon path costs no
+re-calibration.  *Surrogate (backward only)*: SuperSpike through the spike
+comparator, straight-through inside the IMA ramp window, straight-through
+with clip through the twin-cell ternary rounding, a relaxed straight-through
+hard gate through the KWN winner mask (``kwn_relax`` leaks a fraction of
+the loser gradient — the pure hard gate starves non-winner columns), and a
+hard cut at the V_mem saturation rails.  The reference semantics live in
+``ref.fused_macro_seq_vjp_ref``; the Pallas backward matches its
+``jax.grad``.
+
+Noise-aware QAT
+---------------
+Passing an ``ima.IMANoiseModel`` trains against the in-kernel Fig. 7 error
+draws; a fresh counter seed per optimization step (``train`` handles this)
+makes each step a fresh silicon instance, which is what closes the
+clean->noisy accuracy gap at serving time (the reduced Fig. 8 experiment in
+``examples/train_snn_events.py``).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lif as lif_lib
+from repro.core import macro as macro_lib
+from repro.core import prbs as prbs_lib
+from repro.core import ternary as ternary_lib
+
+# Loser-gradient leak through the hard KWN winner gate.  0 is the pure hard
+# gate (only winner columns learn — the rich get richer and quiet columns
+# starve); a small leak keeps every column trainable while the primal stays
+# exactly top-K.  0.1 was picked on the N-MNIST stand-in: large enough that
+# fine-tuning recovers noisy accuracy, small enough not to wash out the
+# winner signal.
+DEFAULT_KWN_RELAX = 0.1
+
+
+def quantized_weight_ste(w_hid: jax.Array):
+    """Integer-unit weight with ternary-STE tangent + its per-column scale.
+
+    Primal: exactly ``quantize_weights_3bit(w_hid)[0]`` (the twin-cell grid
+    values the packers store).  Tangent: ``d w / d w_hid = clip_mask /
+    scale`` — the same clipped straight-through ``ternary.quantize_weights_
+    ste`` uses, re-expressed in integer MAC units so it composes with the
+    kernel VJP's integer-unit ``dW``.  Returns (w (I, N), scale (N,)), the
+    scale stop-gradiented (matching the software QAT path).
+    """
+    sg = jax.lax.stop_gradient
+    w_int, scale2 = ternary_lib.quantize_weights_3bit(w_hid)
+    scale2 = sg(scale2)                                   # (1, N)
+    w_sur = w_hid / scale2
+    clip_mask = (jnp.abs(w_sur) <= 3.5).astype(w_hid.dtype)
+    w = sg(w_int) + (w_sur - sg(w_sur)) * clip_mask
+    return w, sg(scale2.reshape(-1))
+
+
+def forward_logits(p, events, cfg, seed, *, noise=None,
+                   kwn_relax: float = DEFAULT_KWN_RELAX,
+                   remat: bool = False):
+    """Differentiable silicon forward: events (B, T, N_in) -> logits.
+
+    The spike stacks are bit-identical to ``snn.forward_silicon(p, ...,
+    fused=True)`` with the same counter seed; gradients flow to ``w_hid``
+    (through the surrogate chain) and ``w_out`` (ordinary autodiff over the
+    spike-count readout).  ``noise`` is the Fig. 7 ``IMANoiseModel`` for
+    noise-aware QAT; ``seed`` an f32 scalar keying the counter streams.
+    KWN mode only — NLD training stays on the software path.
+    """
+    if cfg.mode != "kwn":
+        raise ValueError(
+            f"silicon-in-the-loop training supports mode='kwn' only "
+            f"(got {cfg.mode!r}); NLD trains on the software STE path")
+    b, t_steps = events.shape[0], events.shape[1]
+    w, scale = quantized_weight_ste(p["w_hid"])
+    mcfg = macro_lib.CIMMacroConfig(code_bits=cfg.code_bits,
+                                    mac_range=cfg.mac_range,
+                                    ima_noise=noise)
+    lif_p = lif_lib.LIFParams(beta=cfg.beta, v_th1=cfg.v_th1,
+                              v_th2=cfg.v_th2,
+                              noise_amp=cfg.noise_amp if cfg.use_snl else 0.0)
+    noisy = noise is not None
+    ev_t = jnp.moveaxis(events, 1, 0)                     # (T, B, N_in)
+    st0 = lif_lib.lif_init((b, cfg.n_hidden))
+    if noisy or not cfg.use_snl:
+        noise_t = None                 # in-kernel counter SNL (or none)
+    else:
+        def draw(s, _):
+            s, nz = prbs_lib.prbs_noise(s, (b, cfg.n_hidden),
+                                        lif_p.noise_amp)
+            return s, nz
+        _, noise_t = jax.lax.scan(draw, st0.prbs_state, None,
+                                  length=t_steps)
+    spk_t, _ = macro_lib.fused_seq_vjp(
+        ev_t, w, scale, mcfg, st0.v_mem, k=cfg.k,
+        drive_gain=cfg.drive_gain, beta=cfg.beta, v_th1=cfg.v_th1,
+        v_th2=cfg.v_th2, v_reset=lif_p.v_reset,
+        v_lim=lif_lib.vmem_limit(lif_p.vmem_bits), use_snl=cfg.use_snl,
+        noise=noise_t, snl_amp=lif_p.noise_amp if noisy else 0.0,
+        kwn_relax=kwn_relax, remat=remat, seed=seed)
+    counts = jnp.sum(spk_t, axis=0)
+    return (counts / cfg.n_steps) @ p["w_out"]
+
+
+def loss_fn(p, events, labels, cfg, seed, *, noise=None,
+            kwn_relax: float = DEFAULT_KWN_RELAX, remat: bool = False):
+    """Cross-entropy over the differentiable silicon forward."""
+    logits = forward_logits(p, events, cfg, seed, noise=noise,
+                            kwn_relax=kwn_relax, remat=remat)
+    lse = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(lse, labels[:, None], 1))
+
+
+def step_seed(key: jax.Array) -> jax.Array:
+    """Fresh f32 counter seed for one optimization step (noise-aware QAT).
+
+    Bounded under 2^23 so the float carrier is exact (the VJP keeps the
+    seed float-typed to spare the cotangent machinery an integer primal).
+    """
+    return jax.random.randint(key, (), 0, 2 ** 23).astype(jnp.float32)

@@ -6,7 +6,11 @@ Two checks, stdlib only (runs in the minimal container and in CI):
    and every record carries exactly the fixed keys
    ``op / shape / mode / median_ms / speedup / density`` with the right
    types — so the perf-trajectory artifact stays diffable and downstream
-   tooling never meets a silently renamed field.
+   tooling never meets a silently renamed field.  The canonical op set
+   (``REQUIRED_OPS`` — the clean-path serving ops plus the ``train_step``
+   rows the silicon-training subsystem added) must each appear at least
+   once, so a refactor cannot silently drop a tracked hot path from the
+   artifact.
 
 2. **Regression gate** (``--baseline PATH``): every *tracked clean-path*
    record (``mode == "kwn"`` with a baseline median of at least
@@ -39,6 +43,12 @@ RECORD_TYPES = {"op": str, "shape": str, "mode": str,
                 "median_ms": (int, float), "speedup": (int, float),
                 "density": (int, float)}
 MODES = {"kwn", "kwn+noise"}
+# Every tracked hot path must appear in the artifact at least once:
+# the serving-side fused ops and the training-side step rows (software
+# BPTT baseline + the fused-VJP silicon step, clean and noisy QAT).
+REQUIRED_OPS = {"composed_step", "fused_step", "fused_seq_time_major",
+                "fused_seq_noisy", "fused_seq_gated", "fused_seq_dense",
+                "train_step_bptt", "train_step_silicon_vjp"}
 NORMALIZER = ("composed_step", "128x256x128", "kwn")
 TRACKED_MODE = "kwn"   # clean path only: noise overhead is measured, not gated
 MIN_TRACKED_MS = 5.0   # below this, interpret-mode medians are pure jitter
@@ -70,6 +80,10 @@ def check_schema(doc: dict) -> list[str]:
         if isinstance(rec["density"], (int, float)) \
                 and not 0.0 <= rec["density"] <= 1.0:
             errs.append(f"records[{i}].density: {rec['density']} not in [0,1]")
+    seen_ops = {rec.get("op") for rec in records if isinstance(rec, dict)}
+    missing = REQUIRED_OPS - seen_ops
+    if missing:
+        errs.append(f"missing required ops: {sorted(missing)}")
     return errs
 
 
