@@ -32,7 +32,15 @@
    outputs are parity-checked against the ``ref.py`` oracles at every
    density, and each entry reports the measured skipped-block ratio.
 
-6. **train step**: one SGD-momentum step through (a) the software BPTT
+6. **multilayer**: a 2-layer KWN stack (256x256 -> 256x128) through (a)
+   one stacked fused launch (per-layer membranes carried in VMEM, the
+   inter-layer spike tensor never written to HBM, layer 1 activity-gated
+   in-kernel by layer 0's winner sets) vs (b) the layer-by-layer HBM
+   round trip: two sequential single-layer ``fused_macro_seq`` launches
+   with the spike stack materialized between them.  Both bitwise-checked
+   against the composed per-layer oracle chain.
+
+7. **train step**: one SGD-momentum step through (a) the software BPTT
    path (``forward_train``: dense-f32 scan + STE fake-quant — the
    pre-silicon-training baseline), (b) the silicon path (forward = the
    fused kernel, backward = the time-reversed surrogate BPTT Pallas
@@ -401,6 +409,121 @@ def _train_variants(m=TRAIN_M, n_in=TRAIN_N_IN, n_out=TRAIN_N_OUT,
     }
 
 
+ML_WIDTHS = (256, 128)   # 2-layer stack: 256x256 -> 256x128
+ML_T = 16
+
+
+def _multilayer_variants(t=ML_T, m=M, n_in=N_IN, widths=ML_WIDTHS):
+    """Stacked 2-layer fused launch vs the layer-by-layer HBM round trip.
+
+    Three cadences for the same 2-layer KWN network over a T-step stream:
+
+    * **fused stack** — one Pallas launch for all layers and steps; the
+      inter-layer spike tensor lives in registers, layer 1's activity is
+      layer 0's winner set evaluated in-kernel;
+    * **composed round trip** — the pre-fusion pipeline per layer per step
+      (``ternary_mac`` -> ``nlq_convert`` -> ``kwn_topk`` -> ``lif_step``
+      under one jitted scan): every stage intermediate AND every
+      inter-layer spike tensor round-trips through HBM — the baseline the
+      ISSUE's >=1.2x floor gates on, and the direct depth generalization
+      of this bench's canonical ``composed_step`` row;
+    * **per-layer fused launches** — two sequential single-layer
+      ``fused_macro_seq`` launches with the spike stack materialized and
+      re-activity-planned between them (the best the single-layer kernel
+      can do for depth; reported as supplementary detail — on the
+      interpret-mode CPU its compute is identical to the stack's, so the
+      gap there is launch/interchange overhead only).
+
+    All three are checked bitwise against the composed per-layer oracle
+    chain (``ref.fused_macro_multi_seq_ref``).
+    """
+    key = jax.random.PRNGKey(7)
+    ks = jax.random.split(key, 4)
+    tern = lambda k, s: jax.random.randint(k, s, -1, 2).astype(jnp.int8)
+    x = _event_stream(ks[0], 0.05, (t, m, n_in))
+    cb = ima_lib.nlq_codebook(CODE_BITS, -24, 24)
+    planes, f_in = [], n_in
+    for li, w in enumerate(widths):
+        planes.append((tern(jax.random.fold_in(ks[1], li), (f_in, w)),
+                       tern(jax.random.fold_in(ks[2], li), (f_in, w)),
+                       cb.boundaries, cb.levels,
+                       jax.random.uniform(jax.random.fold_in(ks[3], li),
+                                          (w,), minval=0.05, maxval=0.3)))
+        f_in = w
+    vs = [jnp.zeros((m, w)) for w in widths]
+    noises = [jnp.zeros((t, m, w)) for w in widths]
+    win = (K_WIN,) * len(widths)
+
+    def fused(x, v1, v2, n1, n2):
+        # ops.fused_macro_multi_seq is jitted internally; x/v/noise ride
+        # as arguments (never closure constants — see the sweep note)
+        out = ops.fused_macro_multi_seq(x, planes, [v1, v2], [n1, n2],
+                                        ks=win, drive_gain=DRIVE_GAIN)
+        return out.v_outs, out.spikes
+
+    @jax.jit
+    def composed(x, v1, v2, n1, n2):
+        def body(carry, inp):
+            vs_c = carry
+            cur, new_vs = inp[0], []
+            for (msb, lsb, bounds, levels, scale), v, nz in zip(
+                    planes, vs_c, inp[1:]):
+                mac = ops.ternary_mac(cur, msb, lsb)
+                _, mac_q = ops.nlq_convert(mac, bounds, levels)
+                mask, steps = ops.kwn_topk(mac, bounds, K_WIN)
+                drive = mac_q * scale * mask * DRIVE_GAIN
+                v, cur = ops.lif_step(v, drive, mask, nz)
+                new_vs.append(v)
+            return tuple(new_vs), cur
+        (v1o, v2o), spk = jax.lax.scan(body, (v1, v2),
+                                       (x, noises[0], noises[1]))
+        return (v1o, v2o), spk
+
+    def per_layer(x, v1, v2, n1, n2):
+        p1, p2 = planes
+        _, v1o, spk1, _, _ = ops.fused_macro_seq(
+            x, p1[0], p1[1], p1[2], p1[3], p1[4], v1, n1, mode="kwn",
+            k=K_WIN, drive_gain=DRIVE_GAIN, mac_telemetry=False)
+        _, v2o, spk2, _, _ = ops.fused_macro_seq(
+            spk1.astype(jnp.int8), p2[0], p2[1], p2[2], p2[3], p2[4], v2,
+            n2, mode="kwn", k=K_WIN, drive_gain=DRIVE_GAIN,
+            mac_telemetry=False)
+        return (v1o, v2o), spk2
+
+    args = (x, vs[0], vs[1], noises[0], noises[1])
+    ms_fused = _time(fused, args, iters=5) / 1e3
+    ms_composed = _time(composed, args, iters=5) / 1e3
+    ms_layer = _time(per_layer, args, iters=5) / 1e3
+
+    vf, spk_f = fused(*args)
+    vc, spk_c = composed(*args)
+    vl, spk_l = per_layer(*args)
+    want_v, want_spk, *_ = ref.fused_macro_multi_seq_ref(
+        x, planes, vs, noises, ks=win, drive_gain=DRIVE_GAIN)
+
+    def _eq(vres, spk):
+        return bool(jnp.array_equal(spk, want_spk)
+                    and all(jnp.array_equal(a, b)
+                            for a, b in zip(vres, want_v)))
+
+    parity = {
+        "fused_vs_oracle": _eq(vf, spk_f),
+        "composed_vs_oracle": _eq(vc, spk_c),
+        "per_layer_vs_oracle": _eq(vl, spk_l),
+    }
+    return {
+        "t": t, "batch": m,
+        "geometry": f"{n_in}x{'x'.join(str(w) for w in widths)}",
+        "layers": len(widths),
+        "ms_fused_stack": round(ms_fused, 1),
+        "ms_layer_roundtrip": round(ms_composed, 1),
+        "ms_per_layer_launches": round(ms_layer, 1),
+        "speedup_vs_roundtrip": round(ms_composed / ms_fused, 2),
+        "speedup_vs_per_layer_launches": round(ms_layer / ms_fused, 2),
+        "parity": parity,
+    }
+
+
 def _step_comparison(m, n_in, n_out, key):
     """Fused-vs-composed single step at a given layer geometry."""
     x, msb, lsb, cb, scale, v, noise = _operands(key, m=m, n_in=n_in,
@@ -437,6 +560,7 @@ def run() -> dict:
     noisy_stats = _noisy_variants()
     density_stats = _density_sweep()
     train_stats = _train_variants()
+    multilayer_stats = _multilayer_variants()
 
     # Early-stop statistics the energy model consumes (measured, per row).
     steps = np.asarray(fused[3]).reshape(-1)
@@ -466,6 +590,7 @@ def run() -> dict:
         "noisy": noisy_stats,
         "density_sweep": density_stats,
         "train": train_stats,
+        "multilayer": multilayer_stats,
         "early_stop": {
             "mean_adc_steps": round(mean_steps, 2),
             "full_ramp_steps": full,
@@ -531,6 +656,16 @@ def records(report: dict) -> list[dict]:
          "median_ms": noisy["ms_noisy"],
          "speedup": round(1.0 / noisy["noise_overhead"], 2),
          "density": SPIKE_RATE},
+    ]
+    ml = report["multilayer"]
+    ml_shape = f"{ml['batch']}x{ml['geometry']}x{ml['t']}"
+    out += [
+        {"op": "fused_seq_2layer_roundtrip", "shape": ml_shape,
+         "mode": "kwn", "median_ms": ml["ms_layer_roundtrip"],
+         "speedup": 1.0, "density": 0.05},
+        {"op": "fused_seq_2layer", "shape": ml_shape, "mode": "kwn",
+         "median_ms": ml["ms_fused_stack"],
+         "speedup": ml["speedup_vs_roundtrip"], "density": 0.05},
     ]
     train_shape = f"{train['batch']}x{train['geometry']}x{train['t']}"
     out += [

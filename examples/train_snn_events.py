@@ -17,8 +17,15 @@ the clean/noisy fused accuracies are printed before and after — the point
 being that training against the silicon's own noise closes the
 clean->noisy gap the software-trained model pays at serving time.
 
+Passing ``--stack W1,W2[,...]`` appends a stacked-KWN cell: the same
+software train, then clean + noisy evaluation through the *multi-layer*
+fused kernel — all L macro layers chained in one Pallas launch per
+sequence, the inter-layer spike tensor never leaving the chip — and the
+same serving-engine drain.  (Silicon fine-tuning stays single-layer: the
+stacked backward is a roadmap follow-up.)
+
     PYTHONPATH=src python examples/train_snn_events.py [--steps 150]
-        [--silicon-steps 60]
+        [--silicon-steps 60] [--stack 96,64]
 """
 
 import argparse
@@ -42,6 +49,10 @@ def main():
                     choices=list(ev_lib.DATASETS))
     ap.add_argument("--serve-requests", type=int, default=96,
                     help="event streams pushed through the serving engine")
+    ap.add_argument("--stack", default="",
+                    help="comma-separated hidden widths for an extra "
+                         "stacked-KWN cell (e.g. 96,64); every layer runs "
+                         "in one multi-layer fused launch")
     args = ap.parse_args()
 
     ds = ev_lib.EventDataset(ev_lib.DATASETS[args.dataset])
@@ -100,6 +111,37 @@ def main():
                       f"acc {hits/len(done):.3f}  measured ADC saving "
                       f"{rep['measured_adc_saving']:.2f}  "
                       f"{rep['pj_per_sop']:.2f} pJ/SOP")
+
+    if args.stack:
+        widths = tuple(int(w) for w in args.stack.split(","))
+        k_top = 12 if args.dataset == "dvs_gesture" else 3
+        cfg = snn.SNNConfig(n_in=dcfg.n_in, n_steps=dcfg.n_steps,
+                            n_classes=dcfg.n_classes, mode="kwn",
+                            hidden_layers=widths,
+                            k_layers=(k_top,) * len(widths))
+        p, losses = snn.train(cfg, ds, n_steps=args.steps, batch=64)
+        acc_f, tele_f = snn.evaluate(p, cfg, ds, jax.random.PRNGKey(1),
+                                     n_batches=4, fused=True)
+        acc_n, _ = snn.evaluate(p, cfg, ds, jax.random.PRNGKey(1),
+                                n_batches=4, noise=noise_model, fused=True)
+        layers = "x".join(str(w) for w in widths)
+        print(f"{args.dataset} KWN stack {layers} (one fused launch, "
+              f"{len(widths)} layers on-chip): loss "
+              f"{losses[0]:.2f}->{losses[-1]:.2f}  "
+              f"fused acc {acc_f:.3f}  noisy fused acc {acc_n:.3f}  "
+              f"skipped blocks {tele_f['skipped_block_ratio']:.2f}")
+        if args.serve_requests:
+            ev, lab = ds.sample(jax.random.PRNGKey(7), args.serve_requests)
+            engine = SNNEventEngine(cfg, p, batch_slots=32)
+            for i in range(args.serve_requests):
+                engine.submit(EventRequest(uid=i, events=ev[i],
+                                           label=int(lab[i])))
+            done = engine.run()
+            hits = sum(r.pred == r.label for r in done)
+            rep = engine.energy_report(args.dataset)
+            print(f"  serve[stack]: {len(done)} requests  "
+                  f"acc {hits/len(done):.3f}  "
+                  f"{rep['pj_per_sop']:.2f} pJ/SOP")
 
 
 if __name__ == "__main__":

@@ -40,6 +40,40 @@ Two execution paths:
     occupied code range — bit-identical outputs, event-proportional work.
     Raw-MAC telemetry is opt-in on this path (``mac_telemetry``): serving
     never pays the (T, ..., NC) HBM stack.
+
+Stacked-layer API (multi-layer fused networks)
+----------------------------------------------
+Deep KWN networks chain macro layers *on chip*: ``pack_kwn_stack`` packs a
+list of per-layer integer weights into one ``FusedMacroWeights`` list, and
+``fused_multi_seq`` runs the whole stack — every layer, every time step —
+in a single Pallas launch (``kernels.fused_macro.fused_macro_multi_seq``).
+Per-layer weight planes are layer-stationary (const-indexed, staged once
+per launch), per-layer LIF membranes are carried in VMEM across the T
+axis, and the inter-layer ternary spike tensor is a register value handed
+from layer l's KWN head straight into layer l+1's MAC — it never touches
+HBM.  Only the *final* layer's spike/mask stacks are materialized.
+
+Because each KWN layer emits exactly K winners of N columns, layer l's
+winner set IS layer l+1's activity plan: the stacked kernel computes the
+multi-layer occupancy map *in kernel* (``jnp.any`` over each register-
+resident K tile of the previous layer's spikes) instead of host-side —
+only layer 0, whose events are host-visible, uses the scalar-prefetched
+host map.  All-zero tiles skip the plane decode + MXU contraction exactly
+like the single-layer gating (bitwise-neutral), and the per-layer
+occupied-block counters leave the kernel as telemetry
+(``MultiSeqOut.occupancy`` / ``total_blocks`` -> the serving
+skipped-block ratio), so depth costs no HBM spike traffic even for the
+energy accounting: hidden-layer SOP counts come from the per-step
+row-wise ``spike_counts`` reduction, not from spike tensors.
+
+``plan_fused_stack`` exposes the per-layer tile plans (layer 0 follows
+the single-layer planner; deeper layers tile in kernel with ragged tails
+— no column padding exists past layer 0).  The oracle is the composed
+per-layer chain ``kernels.ref.fused_macro_multi_seq_ref`` — layer-major
+and step-major schedules compute the same dataflow DAG, so parity is
+bitwise, clean and noisy (per-layer counter seeds keep the noise streams
+collision-free).  The stacked path is KWN-only; NLD stacks and the
+multi-layer surrogate backward are roadmap follow-ups.
 """
 
 from __future__ import annotations
@@ -331,6 +365,65 @@ def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
         activity=activity, mac_telemetry=mac_telemetry, seed=seed,
         step_offset=step_offset)
     return v_out, spk, mask, steps, mac
+
+
+def pack_kwn_stack(w_ints, scales, cfg: CIMMacroConfig):
+    """Pack a KWN layer stack: per-layer int weights -> fused operands.
+
+    ``w_ints``/``scales`` are parallel per-layer lists ((I_l, N_l) integer
+    weights in [-3, 3] with their per-column scales; I_l must equal
+    N_{l-1} for l > 0 — the layers chain).  All layers share the macro
+    config (one NLQ ramp codebook); only widths differ.  Returns the
+    ``FusedMacroWeights`` list ``fused_multi_seq`` consumes.
+    """
+    stack = [pack_kwn_weights(w, s, cfg) for w, s in zip(w_ints, scales)]
+    for prev, nxt in zip(stack, stack[1:]):
+        assert nxt.msb.shape[0] == prev.msb.shape[1], \
+            (nxt.msb.shape, prev.msb.shape)
+    return stack
+
+
+def plan_fused_stack(batch: int, stack, n_steps: int = 1):
+    """Per-layer (TilePlan, MacroGeometry) for a stacked fused launch.
+
+    Layer 0's plan is authoritative for the launch (row tiling + the host
+    activity-map granularity); deeper layers' plans describe the in-kernel
+    MAC tiling and the per-layer macro-invocation count the energy model
+    charges.  Column padding in deep plans is advisory only — the stacked
+    kernel keeps inter-layer widths exact (spikes never leave registers).
+    """
+    return [plan_fused_tiles(batch, fw, fw.msb.shape[1], n_steps)
+            for fw in stack]
+
+
+def fused_multi_seq(spikes: jax.Array, stack, vs, noises=None, *, ks,
+                    drive_gain: float = 1.0, beta: float = 0.9,
+                    v_th1: float = 1.0, v_th2: float = 0.6,
+                    v_reset: float = 0.0, v_lim: float = 8.0,
+                    use_snl: bool = True, ima_noise=None,
+                    snl_amp: float = 0.0, gate: bool = True,
+                    tile_shapes=None, seeds=None, step_offset=0):
+    """A whole event sequence through L stacked KWN macro layers, fused.
+
+    spikes (T, ..., I), stack a ``pack_kwn_stack`` result, vs/noises
+    per-layer membranes / pre-drawn SNL tensors (noises=None selects the
+    in-kernel counter streams), ks the per-layer winner counts, seeds the
+    per-layer counter seeds (keep them distinct — the oracle chain uses
+    the same ones).  One Pallas launch covers every layer and every time
+    step; the inter-layer spike tensors never reach HBM (see the module
+    docstring).  Returns ``kernels.ops.MultiSeqOut``.
+    """
+    from repro.kernels import ops as kernel_ops
+    for fw in stack:
+        assert fw.mode == "kwn", "the stacked fused path is KWN-only"
+    s = ternary_lib.ternary_input_encode(spikes)
+    return kernel_ops.fused_macro_multi_seq(
+        s, [(fw.msb, fw.lsb, fw.boundaries, fw.levels, fw.scale)
+            for fw in stack],
+        vs, noises, ks=ks, drive_gain=drive_gain, beta=beta, v_th1=v_th1,
+        v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl,
+        ima_noise=ima_noise, snl_amp=snl_amp, gate=gate,
+        tile_shapes=tile_shapes, seeds=seeds, step_offset=step_offset)
 
 
 def fused_seq_vjp(spikes: jax.Array, w: jax.Array, scale: jax.Array,

@@ -764,6 +764,269 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
     return mac, v_out, spikes, mask, steps
 
 
+# ---------------------------------------------------------------------------
+# Stacked multi-layer sequence kernel
+# ---------------------------------------------------------------------------
+
+class LayerSpec(NamedTuple):
+    """Static per-layer geometry of the stacked sequence kernel.
+
+    Hashable (jit-static).  ``k_dim`` is the input width this layer's weight
+    planes see: for layer 0 that is the padded event width the launch
+    streams; for deeper layers it is the *unpadded* previous layer's column
+    count — inter-layer spikes live in registers, so the stacked kernel
+    needs no column padding at all.  ``bk``/``bn`` are the in-kernel MAC
+    tile sizes (static Python loops over ragged-tail slices): ``bk`` is
+    also the occupancy-gating granularity, mirroring the single-layer
+    kernel's (step, row-tile, K-tile) blocks.
+    """
+
+    k_dim: int     # input rows of this layer's weight planes
+    n: int         # output columns (== NC; the KWN stack is unpadded)
+    k: int         # KWN winner count for this layer
+    bk: int        # K-tile size (gating granularity; ragged tail allowed)
+    bn: int        # column-tile size of the in-kernel MAC loop
+
+    @property
+    def n_k(self) -> int:
+        """Number of K tiles (occupancy words per (step, row-tile))."""
+        return -(-self.k_dim // self.bk)
+
+
+def _multi_seq_kwn_kernel(*refs, specs, ratio, bm, n_i, n_codes, beta,
+                          v_th1, v_th2, v_reset, v_lim, use_snl, drive_gain,
+                          ima_noise, snl_amp, has_noise, gated):
+    """L stacked KWN macro layers per (row-tile, time-step) grid step.
+
+    The inter-layer ternary spike tensor never exists outside this kernel
+    body: layer l's spike output is a register value fed straight into
+    layer l+1's MAC.  Per-layer membranes are carried in VMEM output
+    blocks across the whole T axis; per-layer weight planes are
+    const-indexed full-array refs (layer-stationary — staged once for the
+    launch, resident across every time step).
+
+    Gating: layer 0 consumes the scalar-prefetched host occupancy map
+    (events are host-visible, so the host plans them, exactly like the
+    single-layer kernel); for layer l > 0 the previous layer's winner set
+    IS the activity plan — occupancy of each K tile is computed *in
+    kernel* from the register-resident spikes (``jnp.any(tile != 0)``),
+    and all-zero tiles skip the plane decode + MXU contraction.  Skipped
+    blocks contribute exactly-zero partials, so gating is bitwise-neutral
+    (same argument as ``_accumulate_mac_tile``).  The per-layer occupied-
+    block counts are emitted as telemetry — the multi-layer occupancy map
+    leaves the kernel as counters, not as spike tensors.
+    """
+    refs = list(refs)
+    occ_ref = refs.pop(0) if gated else None
+    x_ref = refs.pop(0)
+    ctl_ref = refs.pop(0)
+    n_layers = len(specs)
+    w_refs = [tuple(refs.pop(0) for _ in range(5)) for _ in range(n_layers)]
+    v0_refs = [refs.pop(0) for _ in range(n_layers)]
+    noise_refs = [refs.pop(0) if has_noise else None for _ in range(n_layers)]
+    v_refs = refs[:n_layers]
+    spike_ref, mask_ref = refs[n_layers], refs[n_layers + 1]
+    steps_refs = refs[n_layers + 2:2 * n_layers + 2]
+    cnt_refs = refs[2 * n_layers + 2:3 * n_layers + 2]
+    occn_refs = refs[3 * n_layers + 2:4 * n_layers + 2]
+
+    i, t = pl.program_id(0), pl.program_id(1)
+    row0 = i * bm
+    step = ctl_ref[0, n_layers] + t
+
+    @pl.when(t == 0)
+    def _load_membranes():
+        for li in range(n_layers):
+            v_refs[li][...] = v0_refs[li][...]
+
+    cur = x_ref[0].astype(jnp.float32)                    # (bm, k_dim_0)
+    last_mask = None
+    for li, spec in enumerate(specs):
+        msb_ref, lsb_ref, bounds_ref, levels_ref, scale_ref = w_refs[li]
+        seed = ctl_ref[0, li]
+        n_occ = jnp.int32(0 if gated else spec.n_k)
+        tiles = []
+        for j0 in range(0, spec.n, spec.bn):
+            jw = min(spec.bn, spec.n - j0)
+            acc = jnp.zeros((bm, jw), jnp.float32)
+            for kk, k0 in enumerate(range(0, spec.k_dim, spec.bk)):
+                kw = min(spec.bk, spec.k_dim - k0)
+                xt = cur[:, k0:k0 + kw]
+
+                def _part(a, xt=xt, k0=k0, kw=kw, j0=j0, jw=jw,
+                          msb_ref=msb_ref, lsb_ref=lsb_ref):
+                    w = (ratio
+                         * msb_ref[k0:k0 + kw, j0:j0 + jw].astype(jnp.float32)
+                         + lsb_ref[k0:k0 + kw,
+                                   j0:j0 + jw].astype(jnp.float32))
+                    return a + jax.lax.dot_general(
+                        xt, w, (((1,), (0,)), ((), ())),
+                        preferred_element_type=jnp.float32)
+
+                if not gated:
+                    acc = _part(acc)
+                else:
+                    if li == 0:       # host-planned occupancy (events)
+                        occ = occ_ref[(t * n_i + i) * spec.n_k + kk]
+                    else:             # in-kernel: winners ARE the plan
+                        occ = jnp.any(xt != 0).astype(jnp.int32)
+                    acc = jax.lax.cond(occ > 0, _part, lambda a: a, acc)
+                    if j0 == 0:       # occupancy is a K-tile property
+                        n_occ = n_occ + (occ > 0).astype(jnp.int32)
+            tiles.append(acc)
+        mac = tiles[0] if len(tiles) == 1 else jnp.concatenate(tiles, -1)
+        codes = _ramp_codes(mac, bounds_ref[...][0])
+        if ima_noise is not None:
+            codes = _ima_noisy_codes(codes, mac, seed, step, row0=row0,
+                                     per_branch=spec.n, logical_n=spec.n,
+                                     ima_noise=ima_noise, n_codes=n_codes)
+        maskf, steps = _kwn_sweep(codes, spec.k, n_codes, bounded=gated)
+        recon = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
+        drive = recon * scale_ref[...] * maskf * drive_gain
+        nz = _lif_noise(noise_refs[li], (bm, spec.n), seed, step, row0=row0,
+                        logical_n=spec.n, snl_amp=snl_amp, use_snl=use_snl)
+        v_new, spike, _ = _lif_update(
+            v_refs[li][...], drive, maskf, nz, beta=beta, v_th1=v_th1,
+            v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
+        v_refs[li][...] = v_new
+        steps_refs[li][0] = steps
+        cnt_refs[li][0] = jnp.sum(spike, axis=-1, keepdims=True)
+        occn_refs[li][...] = jnp.reshape(n_occ, (1, 1, 1))
+        last_mask = maskf
+        cur = spike                   # register hand-off to the next layer
+    spike_ref[0] = cur
+    mask_ref[0] = last_mask
+
+
+@functools.partial(jax.jit, static_argnames=(
+    "specs", "ratio", "drive_gain", "use_snl", "bm", "ima_noise",
+    "snl_amp", "has_noise", "gated", "interpret") + _LIF_STATICS)
+def fused_macro_multi_seq(x: jax.Array, planes, v0s, noises=None,
+                          activity: jax.Array | None = None, ctl=None, *,
+                          specs: tuple, ratio: float = 2.0,
+                          drive_gain: float = 1.0, beta: float = 0.9,
+                          v_th1: float = 1.0, v_th2: float = 0.6,
+                          v_reset: float = 0.0, v_lim: float = 8.0,
+                          use_snl: bool = True, bm: int = DEFAULT_BM,
+                          ima_noise=None, snl_amp: float = 0.0,
+                          has_noise: bool = False, gated: bool = False,
+                          interpret: bool = True):
+    """L stacked KWN macro layers over a whole event sequence, one launch.
+
+    x:       (T, M, K0) int8 ternary events (K0 padded to layer 0's K
+             tiling; M padded to ``bm``).
+    planes:  per-layer (msb, lsb, boundaries, levels, scale) tuples; the
+             int8 twin-cell planes are (k_dim_l, n_l) *unpadded* for
+             l > 0 (inter-layer spikes never leave registers, so the
+             stacked kernel needs no column padding).
+    v0s:     per-layer (M, n_l) f32 initial membranes.
+    noises:  per-layer (T, M, n_l) pre-drawn SNL noise (clean-path PRBS
+             parity) when ``has_noise``; None for in-kernel counter noise.
+    activity: (T, M/bm, K0/bk0) int32 layer-0 occupancy map when
+             ``gated`` (scalar-prefetched).  Deeper layers gate on the
+             in-kernel winner sets — no host map exists for them.
+    ctl:     (1, L+1) int32: per-layer counter seeds + the step offset.
+    specs:   tuple of ``LayerSpec`` (static per-layer geometry).
+
+    Returns (v_outs (per-layer (M, n_l)), spikes (T, M, n_L) — the FINAL
+    layer only, mask (T, M, n_L), steps (per-layer (T, M, 1) i32),
+    counts (per-layer (T, M, 1) f32 row-wise spike counts — the telemetry
+    stand-in for the deep spike tensors that never reach HBM),
+    occupancy (per-layer (T, M/bm, 1) i32 occupied-K-tile counts)).
+    """
+    t_steps, m, kdim = x.shape
+    n_layers = len(specs)
+    assert kdim == specs[0].k_dim and m % bm == 0, (x.shape, specs[0], bm)
+    n_codes = planes[0][3].shape[-1]
+    n_i = m // bm
+    if gated:
+        assert activity.shape == (t_steps, n_i, specs[0].n_k), \
+            (activity.shape, (t_steps, n_i, specs[0].n_k))
+
+    row_spec = lambda shape: pl.BlockSpec(shape, lambda i, t, *_: (i, 0))
+    step_spec = lambda shape: pl.BlockSpec(shape, lambda i, t, *_: (t, i, 0))
+    const_spec = lambda shape: pl.BlockSpec(
+        shape, lambda i, t, *_: (0,) * len(shape))
+    if ctl is None:
+        ctl = jnp.zeros((1, n_layers + 1), jnp.int32)
+
+    in_specs = [
+        pl.BlockSpec((1, bm, kdim), lambda i, t, *_: (t, i, 0)),      # x
+        const_spec((1, n_layers + 1)),                                # ctl
+    ]
+    inputs = [x.astype(jnp.int8), ctl.astype(jnp.int32)]
+    for spec, (msb, lsb, bounds, levels, scale) in zip(specs, planes):
+        assert msb.shape == (spec.k_dim, spec.n), (msb.shape, spec)
+        in_specs += [const_spec((spec.k_dim, spec.n)),
+                     const_spec((spec.k_dim, spec.n)),
+                     const_spec((1, n_codes - 1)),
+                     const_spec((1, n_codes)),
+                     const_spec((1, spec.n))]
+        inputs += [msb.astype(jnp.int8), lsb.astype(jnp.int8),
+                   bounds.astype(jnp.float32).reshape(1, -1),
+                   levels.astype(jnp.float32).reshape(1, -1),
+                   scale.astype(jnp.float32).reshape(1, -1)]
+    for spec, v0 in zip(specs, v0s):
+        assert v0.shape == (m, spec.n), (v0.shape, spec)
+        in_specs.append(row_spec((bm, spec.n)))
+        inputs.append(v0.astype(jnp.float32))
+    if has_noise:
+        for spec, nz in zip(specs, noises):
+            assert nz.shape == (t_steps, m, spec.n), (nz.shape, spec)
+            in_specs.append(step_spec((1, bm, spec.n)))
+            inputs.append(nz.astype(jnp.float32))
+
+    n_last = specs[-1].n
+    out_specs = [row_spec((bm, spec.n)) for spec in specs]            # v
+    out_shape = [jax.ShapeDtypeStruct((m, spec.n), jnp.float32)
+                 for spec in specs]
+    out_specs += [step_spec((1, bm, n_last)), step_spec((1, bm, n_last))]
+    out_shape += [jax.ShapeDtypeStruct((t_steps, m, n_last), jnp.float32),
+                  jax.ShapeDtypeStruct((t_steps, m, n_last), jnp.float32)]
+    out_specs += [step_spec((1, bm, 1)) for _ in specs]               # steps
+    out_shape += [jax.ShapeDtypeStruct((t_steps, m, 1), jnp.int32)
+                  for _ in specs]
+    out_specs += [step_spec((1, bm, 1)) for _ in specs]               # counts
+    out_shape += [jax.ShapeDtypeStruct((t_steps, m, 1), jnp.float32)
+                  for _ in specs]
+    out_specs += [pl.BlockSpec((1, 1, 1), lambda i, t, *_: (t, i, 0))
+                  for _ in specs]                                     # occ
+    out_shape += [jax.ShapeDtypeStruct((t_steps, n_i, 1), jnp.int32)
+                  for _ in specs]
+
+    kernel = functools.partial(
+        _multi_seq_kwn_kernel, specs=specs, ratio=ratio, bm=bm, n_i=n_i,
+        n_codes=n_codes, beta=beta, v_th1=v_th1, v_th2=v_th2,
+        v_reset=v_reset, v_lim=v_lim, use_snl=use_snl,
+        drive_gain=drive_gain, ima_noise=ima_noise, snl_amp=snl_amp,
+        has_noise=has_noise, gated=gated)
+    if gated:
+        outs = pl.pallas_call(
+            kernel,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1, grid=(n_i, t_steps),
+                in_specs=in_specs, out_specs=out_specs),
+            out_shape=out_shape,
+            interpret=interpret,
+        )(activity.reshape(-1).astype(jnp.int32), *inputs)
+    else:
+        outs = pl.pallas_call(
+            kernel,
+            grid=(n_i, t_steps),
+            in_specs=in_specs,
+            out_specs=out_specs,
+            out_shape=out_shape,
+            interpret=interpret,
+        )(*inputs)
+    outs = list(outs)
+    v_outs = tuple(outs[:n_layers])
+    spikes, mask = outs[n_layers], outs[n_layers + 1]
+    steps = tuple(outs[n_layers + 2:2 * n_layers + 2])
+    counts = tuple(outs[2 * n_layers + 2:3 * n_layers + 2])
+    occupancy = tuple(outs[3 * n_layers + 2:4 * n_layers + 2])
+    return v_outs, spikes, mask, steps, counts, occupancy
+
+
 def fused_macro_step(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                      boundaries: jax.Array, levels: jax.Array,
                      scale: jax.Array, v: jax.Array,

@@ -252,6 +252,122 @@ def fused_macro_step(x, msb, lsb, boundaries, levels, scale, v, noise=None,
             steps[0])
 
 
+class MultiSeqOut(NamedTuple):
+    """Outputs of the stacked multi-layer fused sequence.
+
+    ``spikes``/``mask`` are the FINAL layer's per-step stacks — the only
+    spike tensors that exist in HBM.  Hidden-layer activity surfaces as
+    telemetry instead: ``spike_counts`` (per-layer (T, ...) row-wise spike
+    totals — what the SOP energy accounting needs from the inter-layer
+    tensors that never leave the kernel) and ``occupancy`` (per-layer
+    (T, row-tiles) occupied-K-tile counts from the in-kernel occupancy
+    map; ``total_blocks`` is the denominator for the skipped-block ratio,
+    summed over layers).
+    """
+
+    v_outs: tuple
+    spikes: jax.Array
+    mask: jax.Array
+    steps: tuple
+    spike_counts: tuple
+    occupancy: tuple
+    total_blocks: int
+
+
+def fused_macro_multi_seq(x, stack, vs, noises=None, *, ks,
+                          ratio: float = 2.0, drive_gain: float = 1.0,
+                          beta: float = 0.9, v_th1: float = 1.0,
+                          v_th2: float = 0.6, v_reset: float = 0.0,
+                          v_lim: float = 8.0, use_snl: bool = True,
+                          bm: int | None = None, tile_shapes=None,
+                          ima_noise=None, snl_amp: float = 0.0,
+                          gate: bool = True, seeds=None, step_offset=0):
+    """L stacked KWN macro layers, batched: x (T, ..., K0), one launch.
+
+    stack:  per-layer (msb, lsb, boundaries, levels, scale) operand tuples
+            (``core.macro.FusedMacroWeights`` fields; KWN mode only — the
+            planes are (k_dim_l, n_l) with k_dim_l == n_{l-1} for l > 0).
+    vs:     per-layer (..., n_l) initial membranes.
+    noises: per-layer (T, ..., n_l) pre-drawn SNL noise (clean-path PRBS
+            parity), or None for the in-kernel counter streams.
+    ks:     per-layer KWN winner counts.
+    tile_shapes: per-layer (bk, bn) in-kernel MAC tile sizes, or None for
+            defaults (bk = min(k_dim, 256) aligned via the layer-0 tile
+            planner, bn = min(n, 128)); this is the "tile plan" of the
+            stacked kernel — ``bk`` doubles as the occupancy-gating
+            granularity.
+    seeds:  per-layer int32 counter seeds (distinct per layer so the
+            per-layer noise streams never collide), or None for zeros.
+
+    Only layer 0 is padded (rows to the row tile, K to the layer-0 K
+    tiling, both sliced back off); inter-layer widths stay exact because
+    the spike hand-off happens in registers inside the kernel.  Returns a
+    ``MultiSeqOut``.
+    """
+    t = x.shape[0]
+    lead = x.shape[1:-1]
+    kdim = x.shape[-1]
+    n_layers = len(stack)
+    widths = [s[0].shape[-1] for s in stack]
+    assert len(ks) == n_layers
+    if tile_shapes is None:
+        tile_shapes = [(None, None)] * n_layers
+    xm = x.reshape(t, -1, kdim)
+    m0 = xm.shape[1]
+    plan0 = _fused.plan_tiles(m0, kdim, widths[0], widths[0], t,
+                              bm=bm, bk=tile_shapes[0][0])
+    xm = jnp.pad(xm, ((0, 0), (0, plan0.m_pad - m0),
+                      (0, plan0.k_pad - kdim)))
+    activity = fused_activity_map(xm, plan0) if gate else None
+    specs = []
+    for li in range(n_layers):
+        k_dim = plan0.k_pad if li == 0 else widths[li - 1]
+        bk_l, bn_l = tile_shapes[li]
+        if li == 0:
+            bk_l = plan0.bk               # matches the host activity map
+        specs.append(_fused.LayerSpec(
+            k_dim=k_dim, n=widths[li], k=int(ks[li]),
+            bk=int(bk_l or min(k_dim, _fused.DEFAULT_BK)),
+            bn=int(bn_l or min(widths[li], _fused.DEFAULT_BN))))
+    specs = tuple(specs)
+    vs_p = tuple(jnp.pad(v.reshape(-1, w), ((0, plan0.m_pad - m0), (0, 0)))
+                 for v, w in zip(vs, widths))
+    noises_p = None
+    if noises is not None:
+        noises_p = tuple(
+            jnp.pad(nz.reshape(t, -1, w), ((0, 0), (0, plan0.m_pad - m0),
+                                           (0, 0)))
+            for nz, w in zip(noises, widths))
+    if seeds is None:
+        seeds = jnp.zeros((n_layers,), jnp.int32)
+    ctl = jnp.concatenate([
+        jnp.asarray(seeds, jnp.int32).reshape(-1),
+        jnp.asarray(step_offset, jnp.int32).reshape(1)]).reshape(1, -1)
+    planes = [tuple(s[:5]) for s in stack]
+    if plan0.k_pad != kdim:              # zero K rows are MAC-neutral
+        msb0, lsb0 = planes[0][0], planes[0][1]
+        pad_k = ((0, plan0.k_pad - kdim), (0, 0))
+        planes[0] = (jnp.pad(msb0, pad_k), jnp.pad(lsb0, pad_k),
+                     *planes[0][2:])
+    planes = tuple(planes)
+    v_outs, spikes, mask, steps, counts, occ = _fused.fused_macro_multi_seq(
+        xm, planes, vs_p, noises_p, activity, ctl,
+        specs=specs, ratio=ratio, drive_gain=drive_gain, beta=beta,
+        v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
+        use_snl=use_snl, bm=plan0.bm, ima_noise=ima_noise, snl_amp=snl_amp,
+        has_noise=noises is not None, gated=gate, interpret=INTERPRET)
+    n_i = plan0.m_pad // plan0.bm
+    return MultiSeqOut(
+        v_outs=tuple(v[:m0].reshape(*lead, w)
+                     for v, w in zip(v_outs, widths)),
+        spikes=spikes[:, :m0].reshape(t, *lead, widths[-1]),
+        mask=mask[:, :m0].reshape(t, *lead, widths[-1]),
+        steps=tuple(s[:, :m0, 0].reshape(t, *lead) for s in steps),
+        spike_counts=tuple(c[:, :m0, 0].reshape(t, *lead) for c in counts),
+        occupancy=tuple(o[:, :, 0] for o in occ),
+        total_blocks=t * n_i * sum(spec.n_k for spec in specs))
+
+
 # ---------------------------------------------------------------------------
 # Differentiable fused sequence: the silicon-in-the-loop training primitive
 # ---------------------------------------------------------------------------

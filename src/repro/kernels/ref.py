@@ -255,6 +255,53 @@ def fused_macro_seq_ref(x, msb, lsb, boundaries, levels, scale, v,
     return mac_t, v_fin, spk_t, mask_t, steps_t
 
 
+def fused_macro_multi_seq_ref(x, stack, vs, noises=None, *, ks, seeds=None,
+                              ratio: float = 2.0, drive_gain: float = 1.0,
+                              beta: float = 0.9, v_th1: float = 1.0,
+                              v_th2: float = 0.6, v_reset: float = 0.0,
+                              v_lim: float = 8.0, use_snl: bool = True,
+                              ima_noise=None, snl_amp: float = 0.0,
+                              step_offset=0):
+    """Composed per-layer oracle for the stacked fused kernel (KWN only).
+
+    Chains ``fused_macro_seq_ref`` layer by layer: layer l's full spike
+    stack becomes layer l+1's input sequence.  This layer-major order is
+    *exactly* the stacked kernel's step-major order, because layer l+1 at
+    step t depends only on (its own membrane after step t-1, layer l's
+    step-t spikes) — the two schedules compute identical dataflow DAGs, so
+    the comparison is bitwise, not approximate.  KWN spikes are {0, 1},
+    which is its own ternary encoding, so spike stacks feed the next
+    layer's MAC unmodified.
+
+    stack:  per-layer (msb, lsb, boundaries, levels, scale) tuples.
+    vs:     per-layer initial membranes; ks: per-layer winner counts.
+    seeds:  per-layer counter seeds (must match the kernel's per-layer
+            ctl words); noises: per-layer pre-drawn SNL tensors or None
+            for the counter streams.
+
+    Returns (v_fins (per-layer), spikes (T, ..., n_L) — final layer,
+    mask (T, ..., n_L), steps (per-layer (T, ..., 1)),
+    spike_counts (per-layer (T, ...) row-wise |spike| totals)).
+    """
+    cur = x.astype(jnp.float32)
+    v_fins, steps_list, cnt_list = [], [], []
+    spk_t = mask_t = None
+    for li, (msb, lsb, bounds, levels, scale) in enumerate(stack):
+        _, v_fin, spk_t, mask_t, steps_t = fused_macro_seq_ref(
+            cur, msb, lsb, bounds, levels, scale, vs[li],
+            None if noises is None else noises[li],
+            mode="kwn", k=ks[li], ratio=ratio, drive_gain=drive_gain,
+            beta=beta, v_th1=v_th1, v_th2=v_th2, v_reset=v_reset,
+            v_lim=v_lim, use_snl=use_snl, ima_noise=ima_noise,
+            snl_amp=snl_amp, seed=0 if seeds is None else seeds[li],
+            step_offset=step_offset)
+        v_fins.append(v_fin)
+        steps_list.append(steps_t)
+        cnt_list.append(jnp.sum(jnp.abs(spk_t), axis=-1))
+        cur = spk_t
+    return v_fins, spk_t, mask_t, steps_list, cnt_list
+
+
 # ---------------------------------------------------------------------------
 # Differentiable oracle: the surrogate-backward reference (silicon training)
 # ---------------------------------------------------------------------------

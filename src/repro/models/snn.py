@@ -48,6 +48,41 @@ class SNNConfig:
     use_snl: bool = True
     train_nlq: bool = True        # NLQ-aware training (Fig. 6c)
     weight_qat: bool = True       # twin-cell 3-bit QAT
+    # Layer stack (multi-layer fused networks, KWN only).  None keeps the
+    # single-layer network the paper measures; a tuple of widths chains L
+    # macro layers (n_hidden is forced to the last width — the readout
+    # reads the final layer).  k_layers optionally sets per-layer winner
+    # counts (default: cfg.k for every layer).  The config stays hashable
+    # (jit-static), so the fields are coerced to tuples.
+    hidden_layers: tuple[int, ...] | None = None
+    k_layers: tuple[int, ...] | None = None
+
+    def __post_init__(self):
+        if self.hidden_layers is not None:
+            hl = tuple(int(h) for h in self.hidden_layers)
+            if not hl:
+                raise ValueError("hidden_layers must be a non-empty tuple")
+            if self.mode == "nld" and len(hl) > 1:
+                raise ValueError("multi-layer stacks are KWN-only; the NLD "
+                                 "stack is a roadmap follow-up")
+            object.__setattr__(self, "hidden_layers", hl)
+            object.__setattr__(self, "n_hidden", hl[-1])
+        if self.k_layers is not None:
+            kl = tuple(int(x) for x in self.k_layers)
+            if len(kl) != len(self.layer_widths):
+                raise ValueError(f"k_layers has {len(kl)} entries for "
+                                 f"{len(self.layer_widths)} layers")
+            object.__setattr__(self, "k_layers", kl)
+
+    @property
+    def layer_widths(self) -> tuple:
+        """Hidden-layer widths, last one feeding the readout."""
+        return self.hidden_layers or (self.n_hidden,)
+
+    @property
+    def layer_k(self) -> tuple:
+        """Per-layer KWN winner counts."""
+        return self.k_layers or (self.k,) * len(self.layer_widths)
 
 
 def init_params(cfg: SNNConfig, key: jax.Array) -> dict:
@@ -56,12 +91,21 @@ def init_params(cfg: SNNConfig, key: jax.Array) -> dict:
         "w_out": jax.random.normal(k3, (cfg.n_hidden, cfg.n_classes))
         / jnp.sqrt(cfg.n_hidden),
     }
+    widths = cfg.layer_widths
     if cfg.mode == "nld":
         p["dend"] = dendrite_lib.dendrite_init(k1, cfg.n_in, cfg.n_hidden,
                                                cfg.n_branches)
-    else:
+    elif len(widths) == 1:
+        # single layer: the historical RNG stream (cached models depend
+        # on it byte-for-byte), w_hid a bare array
         p["w_hid"] = jax.random.normal(k1, (cfg.n_in, cfg.n_hidden)) \
             / jnp.sqrt(cfg.n_in) * 3.0
+    else:
+        fan_ins = (cfg.n_in,) + widths[:-1]
+        keys = jax.random.split(k1, len(widths))
+        p["w_hid"] = [
+            jax.random.normal(kk, (f_in, w)) / jnp.sqrt(f_in) * 3.0
+            for kk, f_in, w in zip(keys, fan_ins, widths)]
     return p
 
 
@@ -87,13 +131,18 @@ def _hidden_drive_train(p, spikes, cfg: SNNConfig):
             return dendrite_lib.dendrite_mac(p["dend"], spikes, f=f,
                                              nl_cb=_act_cb(cfg), quantize=True)
         return dendrite_lib.dendrite_mac(p["dend"], spikes, f=f)
-    w = p["w_hid"]
+    return _kwn_drive_train(p["w_hid"], spikes, cfg)
+
+
+def _kwn_drive_train(w_full, spikes, cfg: SNNConfig):
+    """One KWN layer's QAT/STE MAC drive, for any layer of a stack."""
+    w = w_full
     if cfg.weight_qat:
         w = ternary_lib.quantize_weights_ste(w)
     mac = spikes @ w
     if cfg.train_nlq:
         scale = jax.lax.stop_gradient(
-            ternary_lib.quantize_weights_3bit(p["w_hid"])[1][0])  # (N,)
+            ternary_lib.quantize_weights_3bit(w_full)[1][0])  # (N,)
         mac = ima_lib.ima_quantize_ste(mac / scale, _nlq_cb(cfg)) * scale
     return mac
 
@@ -102,20 +151,37 @@ def forward_train(p, events, cfg: SNNConfig):
     """BPTT forward: events (B, T, N_in) -> logits (B, classes).
 
     Training uses dense LIF updates (top-K masking is applied at inference;
-    training with the dense objective + QAT is how the silicon was trained)."""
-    b = events.shape[0]
+    training with the dense objective + QAT is how the silicon was trained).
+    With a ``cfg.hidden_layers`` stack, each step chains the layer drives
+    spike->MAC->LIF->spike; the readout reads the last layer's counts.
+    Spike counts are normalized by the *actual* sequence length
+    ``events.shape[1]`` (not ``cfg.n_steps``), so logits are invariant to
+    the configured step count when callers pass shorter/longer sequences."""
+    b, t_steps = events.shape[0], events.shape[1]
+    widths = cfg.layer_widths
+    multi = cfg.mode != "nld" and len(widths) > 1
 
     def step(carry, ev):
-        v, spk_acc = carry
-        drive = _hidden_drive_train(p, ev, cfg) * cfg.drive_gain
-        v = cfg.beta * v + drive
-        s = lif_lib.spike_fn(v, jnp.asarray(cfg.v_th1))
-        v = jnp.where(s > 0, 0.0, v)
-        return (v, spk_acc + s), None
+        vs, spk_acc = carry
+        if not multi:
+            drive = _hidden_drive_train(p, ev, cfg) * cfg.drive_gain
+            v = cfg.beta * vs[0] + drive
+            s = lif_lib.spike_fn(v, jnp.asarray(cfg.v_th1))
+            v = jnp.where(s > 0, 0.0, v)
+            return ((v,), spk_acc + s), None
+        cur, new_vs = ev, []
+        for li in range(len(widths)):
+            drive = _kwn_drive_train(p["w_hid"][li], cur, cfg) * cfg.drive_gain
+            v = cfg.beta * vs[li] + drive
+            cur = lif_lib.spike_fn(v, jnp.asarray(cfg.v_th1))
+            new_vs.append(jnp.where(cur > 0, 0.0, v))
+        return (tuple(new_vs), spk_acc + cur), None
 
-    init = (jnp.zeros((b, cfg.n_hidden)), jnp.zeros((b, cfg.n_hidden)))
-    (v, counts), _ = jax.lax.scan(step, init, jnp.moveaxis(events, 1, 0))
-    return (counts / cfg.n_steps) @ p["w_out"]
+    init = (tuple(jnp.zeros((b, w)) for w in widths)
+            if multi else (jnp.zeros((b, cfg.n_hidden)),),
+            jnp.zeros((b, cfg.n_hidden)))
+    (_, counts), _ = jax.lax.scan(step, init, jnp.moveaxis(events, 1, 0))
+    return (counts / t_steps) @ p["w_out"]
 
 
 def _quantized_weights(p, cfg: SNNConfig):
@@ -168,23 +234,49 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
     (T, B, NC) MAC stack to HBM — inference consumes spikes and masks,
     not raw MACs, and that write was the fused step's largest dead output.
 
+    Stacked configs (``cfg.hidden_layers`` with more than one width) route
+    every ``fused`` choice through the multi-layer machinery: ``"seq"`` /
+    ``"step"`` use the stacked kernel (one launch chains all layers, the
+    inter-layer ternary spike tensor never leaves the chip, layer l's KWN
+    winner set is layer l+1's activity plan), ``False`` composes the stage
+    chain per layer.  All three agree bitwise in KWN mode; NLD stacks and
+    ``mac_telemetry=True`` on stacks are unsupported (ValueError).
+
     Returns (logits, telemetry) where telemetry carries adc_steps per time
     step (early-stop latency), LIF update counts, SOP counts for the
     energy model, and — on the fused paths — the skipped-block ratio of
-    the activity plan (the fraction of MAC blocks gating elided).
+    the activity plan (the fraction of MAC blocks gating elided).  All
+    rates normalize by the *actual* sequence length ``events.shape[1]``,
+    never ``cfg.n_steps``.
     """
     mode = mode or cfg.mode
     k = k or cfg.k
     use_snl = cfg.use_snl if use_snl is None else use_snl
     if fused is True:
         fused = "seq"
-    b = events.shape[0]
+    b, t_steps = events.shape[0], events.shape[1]
+    multi = len(cfg.layer_widths) > 1
+    if multi and mode != "kwn":
+        raise ValueError("multi-layer stacks are KWN-only")
     mcfg = macro_lib.CIMMacroConfig(
         code_bits=cfg.code_bits,
         mac_range=cfg.mac_range if mode == "kwn" else cfg.dend_range,
         ima_noise=noise)
     lif_p = lif_lib.LIFParams(beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
                               noise_amp=cfg.noise_amp if use_snl else 0.0)
+    if multi:
+        ks = cfg.k_layers or (k,) * len(cfg.layer_widths)
+        if fused in ("seq", "step"):
+            if mac_telemetry:
+                raise ValueError("mac_telemetry is single-layer only: the "
+                                 "stacked kernel never writes MACs to HBM")
+            return _forward_silicon_fused_multi(p, events, cfg, ks, use_snl,
+                                                mcfg, lif_p, key, fused)
+        if fused is not False:
+            raise ValueError(f"unknown fused={fused!r}; expected False, "
+                             f"True, 'step', or 'seq'")
+        return _forward_silicon_composed_multi(p, events, cfg, ks, use_snl,
+                                               mcfg, lif_p, key, noise)
     if fused == "seq":
         return _forward_silicon_fused_seq(p, events, cfg, mode, k, use_snl,
                                           mcfg, lif_p, key, mac_telemetry)
@@ -235,11 +327,73 @@ def forward_silicon(p, events, cfg: SNNConfig, key: jax.Array,
              "sops": jnp.zeros((b,))}
     init = (lif_lib.lif_init((b, cfg.n_hidden)), jnp.zeros((b, cfg.n_hidden)),
             tele0)
-    keys = jax.random.split(key, cfg.n_steps)
+    keys = jax.random.split(key, t_steps)
     (state, counts, tele), _ = jax.lax.scan(
         step, init, (jnp.moveaxis(events, 1, 0), keys))
-    logits = (counts / cfg.n_steps) @ p["w_out"]
-    tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)  # per-step means
+    logits = (counts / t_steps) @ p["w_out"]
+    tele = jax.tree.map(lambda x: x / t_steps, tele)  # per-step means
+    return logits, tele
+
+
+def _quantized_weight_stack(p, cfg: SNNConfig):
+    """Per-layer (w_int, scale) for a ``hidden_layers`` stack."""
+    return [ternary_lib.quantize_weights_3bit(w) for w in p["w_hid"]]
+
+
+def _forward_silicon_composed_multi(p, events, cfg: SNNConfig, ks, use_snl,
+                                    mcfg, lif_p, key, noise):
+    """Composed multi-layer inference: the per-layer HBM round-trip path.
+
+    Each time step runs the layer chain through the composed stage
+    pipeline (cim_mac -> IMA -> KWN -> LIF per layer), with every
+    inter-layer spike tensor materialized — the baseline the stacked fused
+    kernel is benchmarked against, and (clean) its bitwise oracle at the
+    model level.  Per-layer noise keys are ``fold_in(step_key, layer)``.
+    """
+    b, t_steps = events.shape[0], events.shape[1]
+    widths = cfg.layer_widths
+    w_stack = _quantized_weight_stack(p, cfg)
+    nlq = _nlq_cb(cfg)
+
+    def step(carry, inp):
+        states, spk_acc, tele = carry
+        ev, kk = inp
+        cur, new_states = ev, []
+        adc = jnp.zeros((b,), jnp.float32)
+        sops = jnp.zeros((b,), jnp.float32)
+        for li, (w_int, scale) in enumerate(w_stack):
+            kl = jax.random.fold_in(kk, li)
+            mac_int = macro_lib.cim_mac(cur, w_int, mcfg, key=kl)
+            if noise is not None:
+                codes = ima_lib.ima_convert_noisy(mac_int, nlq, kl, noise)
+                mac_q = ima_lib.ima_reconstruct(codes, nlq)
+            else:
+                mac_q = ima_lib.ima_quantize(mac_int, nlq)
+            res = kwn_lib.kwn_select(mac_q, ks[li], nlq)
+            drive = (mac_q * scale[0]) * res.mask
+            state, s = lif_lib.lif_step(
+                states[li], drive * cfg.drive_gain, lif_p,
+                update_mask=res.mask, use_snl=use_snl)
+            new_states.append(state)
+            adc = adc + res.adc_steps.astype(jnp.float32)
+            sops = sops + jnp.sum(jnp.abs(cur), axis=-1) * widths[li]
+            cur = s
+        tele = {
+            "adc_steps": tele["adc_steps"] + adc,
+            "lif_updates": tele["lif_updates"] + float(sum(ks)),
+            "sops": tele["sops"] + sops,
+        }
+        return (tuple(new_states), spk_acc + cur, tele), None
+
+    tele0 = {"adc_steps": jnp.zeros((b,)), "lif_updates": jnp.zeros((b,)),
+             "sops": jnp.zeros((b,))}
+    init = (tuple(lif_lib.lif_init((b, w)) for w in widths),
+            jnp.zeros((b, cfg.n_hidden)), tele0)
+    keys = jax.random.split(key, t_steps)
+    (_, counts, tele), _ = jax.lax.scan(
+        step, init, (jnp.moveaxis(events, 1, 0), keys))
+    logits = (counts / t_steps) @ p["w_out"]
+    tele = jax.tree.map(lambda x: x / t_steps, tele)
     return logits, tele
 
 
@@ -308,11 +462,12 @@ def _forward_silicon_fused(p, events, cfg: SNNConfig, mode: str, k: int,
              "sops": jnp.zeros((b,))}
     st0 = lif_lib.lif_init((b, cfg.n_hidden))
     init = (st0.v_mem, st0.prbs_state, jnp.zeros((b, cfg.n_hidden)), tele0)
+    t_steps = events.shape[1]
     (_, _, counts, tele), _ = jax.lax.scan(
         step, init, (jnp.moveaxis(events, 1, 0),
-                     jnp.arange(events.shape[1], dtype=jnp.int32)))
-    logits = (counts / cfg.n_steps) @ p["w_out"]
-    tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)
+                     jnp.arange(t_steps, dtype=jnp.int32)))
+    logits = (counts / t_steps) @ p["w_out"]
+    tele = jax.tree.map(lambda x: x / t_steps, tele)
     tele["skipped_block_ratio"] = _skipped_block_ratio(events, fw, cfg)
     return logits, tele
 
@@ -393,11 +548,133 @@ def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
     (counts, tele), _ = jax.lax.scan(
         fold, (jnp.zeros((b, cfg.n_hidden)), tele0),
         (spk_t, steps_t, sops_t))
-    logits = (counts / cfg.n_steps) @ p["w_out"]
-    tele = jax.tree.map(lambda x: x / cfg.n_steps, tele)
+    logits = (counts / t_steps) @ p["w_out"]
+    tele = jax.tree.map(lambda x: x / t_steps, tele)
     tele["skipped_block_ratio"] = jnp.full(
         (b,), jnp.clip(1.0 - jnp.mean(activity.astype(jnp.float32)),
                        0.0, 1.0))
+    return logits, tele
+
+
+def _pack_fused_stack(p, cfg: SNNConfig, mcfg):
+    w_ints, scales = [], []
+    for w_int, scale in _quantized_weight_stack(p, cfg):
+        w_ints.append(w_int)
+        scales.append(scale.reshape(-1))
+    return macro_lib.pack_kwn_stack(w_ints, scales, mcfg)
+
+
+def _noise_seeds(key: jax.Array, n_layers: int) -> jax.Array:
+    """Per-layer counter seeds: distinct words so layer noise streams
+    never collide (the stacked kernel's ctl row)."""
+    return jax.random.randint(key, (n_layers,), 0,
+                              jnp.iinfo(jnp.int32).max, dtype=jnp.int32)
+
+
+def _forward_silicon_fused_multi(p, events, cfg: SNNConfig, ks, use_snl,
+                                 mcfg, lif_p, key, cadence: str):
+    """Stacked fused inference: L macro layers chained on-chip.
+
+    ``cadence="seq"`` runs the whole sequence and the whole stack in ONE
+    Pallas launch (``macro.fused_multi_seq``): per-layer membranes live in
+    VMEM across time steps and the inter-layer ternary spike tensors never
+    reach HBM — layer l's KWN winner set IS layer l+1's activity plan,
+    evaluated in-kernel (only layer 0 gates on the host occupancy map).
+    ``cadence="step"`` launches the stack once per time step (launch-
+    overhead benchmarking); both draw identical noise streams and are
+    bitwise-equal.
+
+    Hidden-layer activity is reported through telemetry only (per-layer
+    spike counts for SOPs, per-layer occupancy counters for the
+    skipped-block ratio) — the spike planes themselves stay on-chip.
+    """
+    b, t_steps = events.shape[0], events.shape[1]
+    widths = cfg.layer_widths
+    n_layers = len(widths)
+    stack = _pack_fused_stack(p, cfg, mcfg)
+    snl_active = use_snl
+    noisy = mcfg.ima_noise is not None
+    ima_kn = macro_lib.fused_kernel_noise(stack[0], mcfg)
+    seeds = (_noise_seeds(key, n_layers) if noisy
+             else jnp.zeros((n_layers,), jnp.int32))
+    ev_t = jnp.moveaxis(events, 1, 0)                     # (T, B, N_in)
+    v0s = [lif_lib.lif_init((b, w)).v_mem for w in widths]
+    if noisy or not snl_active:
+        noises = None if noisy else [jnp.zeros((t_steps, b, w))
+                                     for w in widths]
+        prbs0 = None
+    else:
+        # pre-draw each layer's PRBS stream exactly as the composed path's
+        # per-layer LIF states thread it (bitwise parity in the clean case)
+        noises, prbs0 = [], []
+        for w in widths:
+            st = lif_lib.lif_init((b, w))
+            prbs0.append(st.prbs_state)
+
+            def draw(s, _, w=w):
+                s, nz = prbs_lib.prbs_noise(s, (b, w), lif_p.noise_amp)
+                return s, nz
+
+            _, nz_t = jax.lax.scan(draw, st.prbs_state, None, length=t_steps)
+            noises.append(nz_t)
+    kw = dict(ks=tuple(ks), drive_gain=cfg.drive_gain, beta=cfg.beta,
+              v_th1=cfg.v_th1, v_th2=cfg.v_th2, v_reset=lif_p.v_reset,
+              v_lim=lif_lib.vmem_limit(lif_p.vmem_bits), use_snl=snl_active,
+              ima_noise=ima_kn,
+              snl_amp=lif_p.noise_amp if (noisy and snl_active) else 0.0,
+              seeds=seeds)
+    if cadence == "seq":
+        out = macro_lib.fused_multi_seq(ev_t, stack, v0s, noises, **kw)
+        spk_t = out.spikes                                  # (T, B, N_last)
+        steps_t = [s for s in out.steps]                    # L x (T, B)
+        cnts_t = [c for c in out.spike_counts]              # L x (T, B)
+        occ_total = sum(jnp.sum(o) for o in out.occupancy)
+        total_blocks = out.total_blocks
+    else:
+        spk_steps, steps_steps, cnts_steps = [], [], []
+        occ_total, total_blocks = jnp.int32(0), 0
+        vs, prbs = v0s, prbs0
+        for t in range(t_steps):
+            if noises is None:
+                nz = None
+            elif prbs is None:
+                nz = [n[t:t + 1] for n in noises]
+            else:
+                nz, new_prbs = [], []
+                for li, w in enumerate(widths):
+                    s, nz_l = prbs_lib.prbs_noise(prbs[li], (b, w),
+                                                  lif_p.noise_amp)
+                    new_prbs.append(s)
+                    nz.append(nz_l[None])
+                prbs = new_prbs
+            out = macro_lib.fused_multi_seq(ev_t[t:t + 1], stack, vs, nz,
+                                            step_offset=t, **kw)
+            vs = list(out.v_outs)
+            spk_steps.append(out.spikes[0])
+            steps_steps.append([s[0] for s in out.steps])
+            cnts_steps.append([c[0] for c in out.spike_counts])
+            occ_total = occ_total + sum(jnp.sum(o) for o in out.occupancy)
+            total_blocks += out.total_blocks
+        spk_t = jnp.stack(spk_steps)
+        steps_t = [jnp.stack([s[li] for s in steps_steps])
+                   for li in range(n_layers)]
+        cnts_t = [jnp.stack([c[li] for c in cnts_steps])
+                  for li in range(n_layers)]
+    counts = jnp.sum(spk_t, axis=0)
+    logits = (counts / t_steps) @ p["w_out"]
+    adc = sum(jnp.sum(s.astype(jnp.float32), axis=0) for s in steps_t)
+    sops = jnp.sum(jnp.sum(jnp.abs(ev_t), axis=-1).astype(jnp.float32),
+                   axis=0) * widths[0]
+    for li in range(1, n_layers):
+        sops = sops + jnp.sum(cnts_t[li - 1], axis=0) * widths[li]
+    tele = {
+        "adc_steps": adc / t_steps,
+        "lif_updates": jnp.full((b,), float(sum(ks))),
+        "sops": sops / t_steps,
+        "skipped_block_ratio": jnp.full(
+            (b,), jnp.clip(1.0 - occ_total.astype(jnp.float32)
+                           / total_blocks, 0.0, 1.0)),
+    }
     return logits, tele
 
 

@@ -61,6 +61,8 @@ class EventRequest:
     adc_steps: float | None = None   # mean early-stop ramp steps per time step
     density: float | None = None     # measured |event| rate (set on submit)
     skipped_block_ratio: float | None = None  # batch activity-plan skip rate
+    _order: int | None = dataclasses.field(default=None, repr=False,
+                                           compare=False)  # submission index
 
 
 class SNNEventEngine:
@@ -110,6 +112,7 @@ class SNNEventEngine:
         self.pack_by_density = pack_by_density
         self.pending: list[EventRequest] = []
         self.completed: list[EventRequest] = []
+        self._submitted = 0
         self._key = jax.random.PRNGKey(seed)
         fused = "seq" if time_major else "step"
         self._fwd = jax.jit(
@@ -122,6 +125,8 @@ class SNNEventEngine:
             # host-side numpy: no device dispatch/sync on the submit path
             ev = np.asarray(req.events)
             req.density = float(np.count_nonzero(ev)) / ev.size
+        req._order = self._submitted
+        self._submitted += 1
         self.pending.append(req)
 
     def _run_batch(self, reqs: list[EventRequest]):
@@ -143,12 +148,21 @@ class SNNEventEngine:
             self.completed.append(req)
 
     def run(self) -> list[EventRequest]:
-        """Drain the queue in fixed-size batches; returns completed requests."""
+        """Drain the queue in fixed-size batches; returns completed requests
+        in submission order.
+
+        Density packing reorders the *batches* (quiet requests run with
+        quiet), but the returned list is always sorted back to the order
+        the requests were submitted in — callers that zip results against
+        their submission sequence must not see the packing permutation.
+        """
         if self.pack_by_density:
             self.pending.sort(key=lambda r: (r.density or 0.0, r.uid))
         while self.pending:
             batch, self.pending = self.pending[:self.b], self.pending[self.b:]
             self._run_batch(batch)
+        self.completed.sort(
+            key=lambda r: r._order if r._order is not None else r.uid)
         return self.completed
 
     def energy_report(self, dataset: str) -> dict:
@@ -157,6 +171,15 @@ class SNNEventEngine:
         Uses the calibrated per-component model (core.energy) but replaces
         the analytic early-stop saving with the mean ADC step count the KWN
         controller actually reported for the served traffic.
+
+        Every statistic in the report — ADC steps, energy, and the
+        skipped-block ratio — is computed over the same population: the
+        completed requests that carry measured ``adc_steps``.  Returns
+        ``{}`` (documented contract, not an error) when there is nothing
+        to report: no completed KWN request with measured ADC statistics,
+        or the engine serves NLD mode, whose ramp always runs all
+        2**code_bits - 1 steps so there is no measured early-stop to
+        report.
         """
         done = [r for r in self.completed if r.adc_steps is not None]
         if not done or self.cfg.mode != "kwn":
@@ -177,7 +200,9 @@ class SNNEventEngine:
             "pj_per_step": bd.total,
             "pj_per_sop": bd.total / energy_lib.sops_per_step(spike_rate),
         }
-        skipped = [r.skipped_block_ratio for r in self.completed
+        # same population as the ADC/energy stats above — a request that
+        # carries a skip ratio but no adc_steps must not dilute the mean
+        skipped = [r.skipped_block_ratio for r in done
                    if r.skipped_block_ratio is not None]
         if skipped:
             # measured activity-plan saving, next to the early-stop saving

@@ -88,6 +88,11 @@ def forward_logits(p, events, cfg, seed, *, noise=None,
         raise ValueError(
             f"silicon-in-the-loop training supports mode='kwn' only "
             f"(got {cfg.mode!r}); NLD trains on the software STE path")
+    if isinstance(p["w_hid"], (list, tuple)):
+        raise NotImplementedError(
+            "silicon-in-the-loop training is single-layer only for now; "
+            "the multi-layer surrogate backward is a roadmap follow-up "
+            "(train stacks on the software path, forward_train)")
     b, t_steps = events.shape[0], events.shape[1]
     w, scale = quantized_weight_ste(p["w_hid"])
     mcfg = macro_lib.CIMMacroConfig(code_bits=cfg.code_bits,
@@ -116,7 +121,9 @@ def forward_logits(p, events, cfg, seed, *, noise=None,
         noise=noise_t, snl_amp=lif_p.noise_amp if noisy else 0.0,
         kwn_relax=kwn_relax, remat=remat, seed=seed)
     counts = jnp.sum(spk_t, axis=0)
-    return (counts / cfg.n_steps) @ p["w_out"]
+    # normalize by the actual sequence length, not cfg.n_steps: logits must
+    # match the inference paths for any T the caller feeds
+    return (counts / t_steps) @ p["w_out"]
 
 
 def loss_fn(p, events, labels, cfg, seed, *, noise=None,

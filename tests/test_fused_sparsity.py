@@ -243,9 +243,11 @@ class TestModelAndServingTelemetry:
                                        label=int(lab[int(i)])))
         done = engine.run()
         assert len(done) == 6
-        # completion order is density-sorted, not FIFO
+        # results come back in SUBMISSION order (here density-descending);
+        # the density sort only reorders the internal batches
         got_dens = [r.density for r in done]
-        assert got_dens == sorted(got_dens)
+        assert got_dens == sorted(got_dens, reverse=True)
+        assert [r.uid for r in done] == [int(i) for i in order]
         assert all(r.skipped_block_ratio is not None for r in done)
         rep = engine.energy_report("nmnist")
         assert 0.0 <= rep["mean_skipped_block_ratio"] <= 1.0

@@ -48,6 +48,7 @@ MODES = {"kwn", "kwn+noise"}
 # BPTT baseline + the fused-VJP silicon step, clean and noisy QAT).
 REQUIRED_OPS = {"composed_step", "fused_step", "fused_seq_time_major",
                 "fused_seq_noisy", "fused_seq_gated", "fused_seq_dense",
+                "fused_seq_2layer", "fused_seq_2layer_roundtrip",
                 "train_step_bptt", "train_step_silicon_vjp"}
 NORMALIZER = ("composed_step", "128x256x128", "kwn")
 TRACKED_MODE = "kwn"   # clean path only: noise overhead is measured, not gated
