@@ -14,18 +14,27 @@ PYTHONPATH_SRC := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST := $(PYTHONPATH_SRC) python -m pytest
 LINT_PATHS := src tests benchmarks examples tools
 
-.PHONY: smoke train-smoke test lint bench bench-check
+.PHONY: smoke train-smoke serve-smoke test lint bench bench-check
 
-# `smoke` and `train-smoke` partition the fast tier (silicon-training
-# tests are owned by `train-smoke`), so CI can run both without executing
-# anything twice; `make smoke train-smoke` is the whole tier-1 set.
+# `smoke`, `train-smoke`, and `serve-smoke` partition the fast tier
+# (silicon-training tests are owned by `train-smoke`, serving-engine
+# tests by `serve-smoke`), so CI can run all three without executing
+# anything twice; together they are the whole tier-1 set.
 smoke:
-	$(PYTEST) -q -m "fast and not slow" --ignore=tests/test_silicon_train.py
+	$(PYTEST) -q -m "fast and not slow" \
+		--ignore=tests/test_silicon_train.py \
+		--ignore=tests/test_serve_engine.py
 
 # Tier-1 silicon-training gate: the 20-step loss-decrease smoke plus the
 # fast-marked gradient-parity subset of tests/test_silicon_train.py.
 train-smoke:
 	$(PYTEST) -q -m "fast and not slow" tests/test_silicon_train.py
+
+# Tier-1 serving gate: continuous-batching engine parity (bitwise vs the
+# one-shot forward, clean and noisy), scheduler/bucketing bugfix pins,
+# and the BatchedEngine rng/round accounting tests.
+serve-smoke:
+	$(PYTEST) -q -m "fast and not slow" tests/test_serve_engine.py
 
 test:
 	$(PYTEST) -x -q

@@ -340,11 +340,17 @@ def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
               v_reset: float = 0.0, v_lim: float = 8.0,
               use_snl: bool = True, ima_noise=None, snl_amp: float = 0.0,
               gate: bool = True, activity: jax.Array | None = None,
-              mac_telemetry: bool = True, seed=0, step_offset=0):
+              mac_telemetry: bool = True, seed=0, step_offset=0,
+              row_ctl: jax.Array | None = None):
     """A whole fused event sequence: spikes (T, ..., I), v (..., N),
     noise (T, ..., N) — or None for the in-kernel counter noise streams
     (see ``fused_step``; this is the noisy-silicon serving path, with no
     pre-drawn noise tensor and no composed-path fallback).
+
+    ``row_ctl`` ((..., 3) int32, batch lead dims) carries per-row
+    ``[seed, step_offset, row_id]`` noise-stream control for the
+    continuous-batching engine — each slot replays the counter stream of
+    an independent batch-1 run (see ``kernels.ops.fused_macro_seq``).
 
     One kernel launch covers all T time steps (time-major grid axis, LIF
     membrane carried in VMEM) and any virtual-macro tiling the layer needs.
@@ -363,7 +369,7 @@ def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
         use_snl=use_snl, ima_noise=ima_noise, snl_amp=snl_amp, gate=gate,
         activity=activity, mac_telemetry=mac_telemetry, seed=seed,
-        step_offset=step_offset)
+        step_offset=step_offset, row_ctl=row_ctl)
     return v_out, spk, mask, steps, mac
 
 

@@ -368,7 +368,7 @@ def _mask_padded_columns(codes: jax.Array, n_valid: int) -> jax.Array:
     return jnp.where(col < n_valid, codes, -1)
 
 
-def _noise_ids(shape, row0, per_branch: int, logical_n: int):
+def _noise_ids(shape, row0, per_branch: int, logical_n: int, rows=None):
     """Global (row, logical-column) counter words for the noise streams.
 
     Rows are absolute batch rows (``row0`` = row-tile offset, computed from
@@ -378,23 +378,29 @@ def _noise_ids(shape, row0, per_branch: int, logical_n: int):
     ``j * per_branch + p``, but the counter uses ``j * logical_n + p`` so
     the draw a real column receives is invariant to the tile plan's padding
     (``per_branch`` changes with (bn, J); ``logical_n`` never does).
+
+    ``rows`` overrides the absolute-row basis with an explicit (bm, 1)
+    per-row id vector (``row_ctl`` path: each batch row replays the stream
+    of an arbitrary virtual row, e.g. row 0 of a batch-1 launch).
     """
-    rows = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + row0
+    if rows is None:
+        rows = jax.lax.broadcasted_iota(jnp.int32, shape, 0) + row0
     col = jax.lax.broadcasted_iota(jnp.int32, shape, 1)
     lcol = (col // per_branch) * logical_n + col % per_branch
     return rows, lcol
 
 
 def _ima_noisy_codes(codes, x, seed, step, *, row0, per_branch, logical_n,
-                     ima_noise, n_codes):
+                     ima_noise, n_codes, rows=None):
     """Counter-PRNG Fig. 7 error injection on the full-width code plane."""
-    rows, cols = _noise_ids(codes.shape, row0, per_branch, logical_n)
+    rows, cols = _noise_ids(codes.shape, row0, per_branch, logical_n,
+                            rows=rows)
     return ctrprng.noisy_ima_codes(codes, x, rows, cols, seed, step,
                                    ima_noise, n_codes)
 
 
 def _lif_noise(noise_ref, rest_shape, seed, step, *, row0, logical_n,
-               snl_amp, use_snl):
+               snl_amp, use_snl, rows=None):
     """SNL noise operand: streamed input (clean path, PRBS parity) or
     in-kernel counter sign noise (noisy path — nothing pre-drawn, nothing
     staged through HBM)."""
@@ -402,22 +408,40 @@ def _lif_noise(noise_ref, rest_shape, seed, step, *, row0, logical_n,
         return noise_ref[0]
     if not use_snl or snl_amp == 0.0:
         return jnp.zeros(rest_shape, jnp.float32)
-    rows, cols = _noise_ids(rest_shape, row0, rest_shape[-1], logical_n)
+    rows, cols = _noise_ids(rest_shape, row0, rest_shape[-1], logical_n,
+                            rows=rows)
     sign = ctrprng.counter_sign(seed, step, rows, cols, ctrprng.TAG_SNL)
     return jnp.float32(snl_amp) * sign
 
 
+def _row_stream_ids(ctl_ref, rc_ref, t):
+    """Per-launch (scalar ctl) or per-row (row_ctl) noise-stream words.
+
+    With ``row_ctl`` present each batch row carries its own
+    ``(seed, step_offset, row_id)`` — seed/step come back as (bm, 1)
+    columns that broadcast through the counter PRNG exactly like the
+    scalar path, and ``row_id`` overrides the absolute-row coordinate so
+    a slot can reproduce the stream of a batch-1 run bit-for-bit.
+    """
+    if rc_ref is None:
+        return ctl_ref[0, 0], ctl_ref[0, 1] + t, None
+    rc = rc_ref[...]
+    return rc[:, 0:1], rc[:, 1:2] + t, rc[:, 2:3]
+
+
 def _unpack_refs(refs, *, gated, has_noise_ref, has_w_dend, mac_out,
-                 train_trace=False):
+                 train_trace=False, has_row_ctl=False):
     """Positional-ref unpacking shared by both mode kernels.
 
     Ref order is (scalar prefetch), inputs, outputs, scratch:
-    ``[occ?] x msb lsb bounds levels scale ctl [w_dend?] v0 [noise?]
-    [mac(out)?] v spike mask steps [vtrace?] [mac(scratch)?]``.
+    ``[occ?] x msb lsb bounds levels scale ctl [row_ctl?] [w_dend?] v0
+    [noise?] [mac(out)?] v spike mask steps [vtrace?] [mac(scratch)?]``.
     """
     refs = list(refs)
     occ_ref = refs.pop(0) if gated else None
     names = ["x", "msb", "lsb", "bounds", "levels", "scale", "ctl"]
+    if has_row_ctl:
+        names.append("row_ctl")
     if has_w_dend:
         names.append("w_dend")
     names.append("v0")
@@ -444,12 +468,13 @@ def _block_occupancy(occ_ref, *, i, t, kk, n_i, n_k):
 def _seq_kwn_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_valid, k,
                     n_codes, beta, v_th1, v_th2, v_reset, v_lim, use_snl,
                     drive_gain, ima_noise, snl_amp, logical_n, has_noise_ref,
-                    gated, mac_out, train_trace):
+                    gated, mac_out, train_trace, has_row_ctl=False):
     (occ_ref, ins, noise_ref, mac_ref, v_ref, spike_ref, mask_ref,
      steps_ref, vtrace_ref) = _unpack_refs(refs, gated=gated,
                                            has_noise_ref=has_noise_ref,
                                            has_w_dend=False, mac_out=mac_out,
-                                           train_trace=train_trace)
+                                           train_trace=train_trace,
+                                           has_row_ctl=has_row_ctl)
     x_ref, msb_ref, lsb_ref = ins["x"], ins["msb"], ins["lsb"]
     bounds_ref, levels_ref = ins["bounds"], ins["levels"]
     scale_ref, ctl_ref, v0_ref = ins["scale"], ins["ctl"], ins["v0"]
@@ -467,7 +492,7 @@ def _seq_kwn_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_valid, k,
 
     @pl.when((j == n_j - 1) & (kk == n_k - 1))
     def _head():
-        seed, step = ctl_ref[0, 0], ctl_ref[0, 1] + t
+        seed, step, row_ids = _row_stream_ids(ctl_ref, ins.get("row_ctl"), t)
         mac = mac_ref[0]                                  # (bm, N) int-valued
         codes = _ramp_codes(mac, bounds_ref[...][0])
         if ima_noise is not None:
@@ -478,14 +503,16 @@ def _seq_kwn_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_valid, k,
             codes = _ima_noisy_codes(codes, mac, seed, step, row0=row0,
                                      per_branch=codes.shape[-1],
                                      logical_n=logical_n,
-                                     ima_noise=ima_noise, n_codes=n_codes)
+                                     ima_noise=ima_noise, n_codes=n_codes,
+                                     rows=row_ids)
         codes = _mask_padded_columns(codes, n_valid)
         maskf, steps = _kwn_sweep(codes, k, n_codes, bounded=gated)
         recon = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
         # Winner drive: LUT value x per-column weight scale, losers exactly 0.
         drive = recon * scale_ref[...] * maskf * drive_gain
         nz = _lif_noise(noise_ref, v_ref.shape, seed, step, row0=row0,
-                        logical_n=logical_n, snl_amp=snl_amp, use_snl=use_snl)
+                        logical_n=logical_n, snl_amp=snl_amp, use_snl=use_snl,
+                        rows=row_ids)
         v_new, spike, v_clip = _lif_update(
             v_ref[...], drive, maskf, nz, beta=beta, v_th1=v_th1,
             v_th2=v_th2, v_reset=v_reset, v_lim=v_lim, use_snl=use_snl)
@@ -500,11 +527,12 @@ def _seq_kwn_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_valid, k,
 def _seq_nld_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_codes,
                     n_branches, beta, v_th1, v_th2, v_reset, v_lim,
                     drive_gain, ima_noise, logical_n, has_noise_ref, gated,
-                    mac_out):
+                    mac_out, has_row_ctl=False):
     (occ_ref, ins, _, mac_ref, v_ref, spike_ref, mask_ref,
      steps_ref, _) = _unpack_refs(refs, gated=gated,
                                   has_noise_ref=has_noise_ref,
-                                  has_w_dend=True, mac_out=mac_out)
+                                  has_w_dend=True, mac_out=mac_out,
+                                  has_row_ctl=has_row_ctl)
     x_ref, msb_ref, lsb_ref = ins["x"], ins["msb"], ins["lsb"]
     bounds_ref, levels_ref = ins["bounds"], ins["levels"]
     scale_ref, ctl_ref = ins["scale"], ins["ctl"]
@@ -523,7 +551,7 @@ def _seq_nld_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_codes,
 
     @pl.when((j == n_j - 1) & (kk == n_k - 1))
     def _head():
-        seed, step = ctl_ref[0, 0], ctl_ref[0, 1] + t
+        seed, step, row_ids = _row_stream_ids(ctl_ref, ins.get("row_ctl"), t)
         mac = mac_ref[0] * scale_ref[...]                 # (bm, J*N) float
         codes = _ramp_codes(mac, bounds_ref[...][0])
         if ima_noise is not None:
@@ -531,7 +559,8 @@ def _seq_nld_kernel(*refs, ratio, bm, bn, n_i, n_j, n_k, n_codes,
             codes = _ima_noisy_codes(codes, mac, seed, step, row0=row0,
                                      per_branch=codes.shape[-1] // n_branches,
                                      logical_n=logical_n,
-                                     ima_noise=ima_noise, n_codes=n_codes)
+                                     ima_noise=ima_noise, n_codes=n_codes,
+                                     rows=row_ids)
         act = _lut_reconstruct(codes, levels_ref[...][0], n_codes)
         bm_rows = act.shape[0]
         n = v_ref.shape[-1]
@@ -562,7 +591,8 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
                     scale: jax.Array, v: jax.Array,
                     noise: jax.Array | None = None,
                     w_dend: jax.Array | None = None,
-                    activity: jax.Array | None = None, *,
+                    activity: jax.Array | None = None,
+                    row_ctl: jax.Array | None = None, *,
                     mode: str = "kwn", k: int = 12, ratio: float = 2.0,
                     drive_gain: float = 1.0, beta: float = 0.9,
                     v_th1: float = 1.0, v_th2: float = 0.6,
@@ -628,6 +658,14 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
     seed:        traced int32 scalar keying both noise streams.
     step_offset: traced int32 added to the grid time index (lets the
                  per-step launch cadence keep the seq-identical stream).
+    row_ctl:     optional (M, 3) int32 per-row stream control
+                 ``[seed, step_offset, row_id]``.  When present it
+                 *replaces* the scalar ``seed``/``step_offset`` and the
+                 absolute-row counter coordinate for that row, so every
+                 batch row replays an independent noise stream — e.g. the
+                 continuous-batching engine gives each slot the
+                 ``(seed, steps_done, 0)`` of its request and the slot's
+                 draws match a batch-1 one-shot run bit-for-bit.
 
     Returns (mac (T, M, NC) f32 or None, v_out (M, N) f32,
     spikes (T, M, N) f32, mask (T, M, N) f32, adc_steps (T, M, 1) i32),
@@ -678,6 +716,11 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
               levels.astype(jnp.float32).reshape(1, -1),
               scale.astype(jnp.float32).reshape(1, -1),
               ctl]
+    has_row_ctl = row_ctl is not None
+    if has_row_ctl:
+        assert row_ctl.shape == (m, 3), (row_ctl.shape, m)
+        in_specs.append(row_spec((bm, 3)))                           # row_ctl
+        inputs.append(row_ctl.astype(jnp.int32))
 
     if mode == "kwn":
         assert nc == n, (nc, n)
@@ -688,7 +731,8 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
             use_snl=use_snl, drive_gain=drive_gain, ima_noise=ima_noise,
             snl_amp=snl_amp, logical_n=logical_n,
             has_noise_ref=has_noise_ref, gated=gated,
-            mac_out=mac_telemetry, train_trace=train_trace)
+            mac_out=mac_telemetry, train_trace=train_trace,
+            has_row_ctl=has_row_ctl)
     elif mode == "nld":
         assert not train_trace, "train_trace is KWN-only (silicon training)"
         assert w_dend is not None and nc % n == 0, (nc, n)
@@ -702,7 +746,7 @@ def fused_macro_seq(x: jax.Array, msb: jax.Array, lsb: jax.Array,
             v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
             drive_gain=drive_gain, ima_noise=ima_noise,
             logical_n=logical_n, has_noise_ref=has_noise_ref, gated=gated,
-            mac_out=mac_telemetry)
+            mac_out=mac_telemetry, has_row_ctl=has_row_ctl)
     else:
         raise ValueError(f"unknown mode {mode!r}")
 

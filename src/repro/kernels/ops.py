@@ -131,7 +131,7 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
                     ima_noise=None, snl_amp: float = 0.0,
                     gate: bool = True, activity=None,
                     mac_telemetry: bool = True, train_trace: bool = False,
-                    seed=0, step_offset=0):
+                    seed=0, step_offset=0, row_ctl=None):
     """Batched time-major fused sequence; x (T, ..., K), v (..., N),
     noise (T, ..., N) or None for in-kernel counter noise.
 
@@ -158,6 +158,12 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
     (row, column) coordinates, so padding and tile choice cannot move a
     draw.  ``noise=None`` with ``snl_amp > 0`` generates the SNL sign noise
     in-kernel as well — the noisy path streams no per-step tensors at all.
+
+    ``row_ctl`` (optional, (..., 3) int32 over the same batch lead dims as
+    ``v``) gives every batch row its own ``[seed, step_offset, row_id]``
+    noise-stream control, overriding the scalar ``seed``/``step_offset`` —
+    the continuous-batching engine uses it so each slot replays the
+    counter stream of an independent batch-1 run.
 
     ``train_trace=True`` (KWN only) appends the per-step membrane trace
     vtrace (T, ..., N) — the post-saturation, pre-reset V_mem — to the
@@ -197,9 +203,12 @@ def fused_macro_seq(x, msb, lsb, boundaries, levels, scale, v, noise=None,
     w_dend_p = w_dend
     if w_dend is not None and plan.n_pad != n:
         w_dend_p = jnp.pad(w_dend, ((0, 0), (0, plan.n_pad - n)))
+    rc = None
+    if row_ctl is not None:
+        rc = jnp.pad(row_ctl.reshape(-1, 3), ((0, plan.m_pad - m0), (0, 0)))
     outs = _fused.fused_macro_seq(
         xm, msb_p, lsb_p, boundaries, levels, scale_p, vm, nm, w_dend_p,
-        activity,
+        activity, rc,
         mode=mode, k=k, ratio=ratio, drive_gain=drive_gain, beta=beta,
         v_th1=v_th1, v_th2=v_th2, v_reset=v_reset, v_lim=v_lim,
         use_snl=use_snl, bm=plan.bm, bk=plan.bk, bn=plan.bn,

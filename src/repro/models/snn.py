@@ -13,7 +13,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Any
+from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -554,6 +554,162 @@ def _forward_silicon_fused_seq(p, events, cfg: SNNConfig, mode: str, k: int,
         (b,), jnp.clip(1.0 - jnp.mean(activity.astype(jnp.float32)),
                        0.0, 1.0))
     return logits, tele
+
+
+class SiliconStreamState(NamedTuple):
+    """Device-resident per-slot state for step-resumable fused inference.
+
+    One row per serving slot; this is the SNN analog of an LM engine's
+    KV cache.  ``v`` is the LIF membrane the fused kernel carries in VMEM
+    within a round and this struct carries *across* rounds; the remaining
+    fields are the per-request accumulators and noise-stream bookkeeping
+    that let a request's results come out bitwise-identical to a one-shot
+    batch-1 ``forward_silicon(fused="seq")`` run no matter how many rounds
+    its sequence was split over or which requests shared the batch.
+    """
+
+    v: jax.Array           # (S, N) f32 LIF membrane
+    prbs: jax.Array        # (S,) uint32 per-slot PRBS LFSR state (clean SNL)
+    counts: jax.Array      # (S, N) f32 spike-count accumulator
+    adc: jax.Array         # (S,) f32 summed early-stop ADC ramp steps
+    sops: jax.Array        # (S,) f32 summed synaptic operations
+    skip_acc: jax.Array    # (S,) f32 summed per-step skipped-block ratio
+    steps_done: jax.Array  # (S,) i32 time steps completed
+    length: jax.Array      # (S,) i32 request sequence length
+    seed: jax.Array        # (S,) i32 per-request counter-PRNG seed word
+
+
+def silicon_stream_init(cfg: SNNConfig, slots: int) -> SiliconStreamState:
+    """Fresh all-idle slot state for ``forward_silicon_stream``."""
+    n = cfg.n_hidden
+    zf = jnp.zeros((slots,), jnp.float32)
+    return SiliconStreamState(
+        v=jnp.zeros((slots, n), jnp.float32),
+        prbs=jnp.full((slots,), prbs_lib.lfsr_init(1)),
+        counts=jnp.zeros((slots, n), jnp.float32),
+        adc=zf, sops=zf, skip_acc=zf,
+        steps_done=jnp.zeros((slots,), jnp.int32),
+        length=jnp.zeros((slots,), jnp.int32),
+        seed=jnp.zeros((slots,), jnp.int32))
+
+
+@jax.jit
+def silicon_stream_admit(state: SiliconStreamState, mask, lengths,
+                         seeds) -> SiliconStreamState:
+    """Reset the masked slots for newly admitted requests.
+
+    ``mask`` (S,) bool selects the slots being (re)admitted; their
+    membrane, accumulators, and PRBS state return to the exact
+    ``lif_init`` starting point a one-shot run begins from.  ``lengths``
+    and ``seeds`` are full (S,) vectors (non-admitted slots just carry
+    their previous values through).
+    """
+    mask = jnp.asarray(mask)
+    m1 = mask[:, None]
+    zf = jnp.float32(0.0)
+    return SiliconStreamState(
+        v=jnp.where(m1, zf, state.v),
+        prbs=jnp.where(mask, prbs_lib.lfsr_init(1), state.prbs),
+        counts=jnp.where(m1, zf, state.counts),
+        adc=jnp.where(mask, zf, state.adc),
+        sops=jnp.where(mask, zf, state.sops),
+        skip_acc=jnp.where(mask, zf, state.skip_acc),
+        steps_done=jnp.where(mask, 0, state.steps_done),
+        length=jnp.asarray(lengths, jnp.int32),
+        seed=jnp.asarray(seeds, jnp.int32))
+
+
+@functools.partial(jax.jit, static_argnames=("cfg", "noise"))
+def forward_silicon_stream(p, events, cfg: SNNConfig,
+                           state: SiliconStreamState,
+                           noise: ima_lib.IMANoiseModel | None = None
+                           ) -> SiliconStreamState:
+    """One continuous-batching round: advance every slot by R time steps.
+
+    ``events`` is the *time-major* (R, S, N_in) round block the engine
+    staged — slot s carries steps ``[steps_done[s], steps_done[s] + R)``
+    of its request's event stream, zero-padded past the request's end.
+    Runs one fused time-major kernel launch (LIF membrane in VMEM within
+    the round, carried across rounds through ``state.v``) and folds this
+    round's spikes/ADC-steps/SOPs into the per-slot accumulators, masking
+    out steps beyond each request's true length so every statistic
+    normalizes by the request's own sequence — never the round count.
+
+    Bitwise parity with one-shot ``forward_silicon(..., fused="seq")`` on
+    a batch of one, clean and noisy, is by construction:
+
+    * noise streams are per-slot — the counter PRNG is keyed through the
+      kernel's ``row_ctl`` path on ``(state.seed, absolute step, row 0)``
+      and the clean-path SNL PRBS is a per-slot LFSR drawing
+      ``cfg.n_hidden`` bits per step from the ``lif_init`` seed — so each
+      slot consumes exactly the stream a batch-1 run would;
+    * every accumulated quantity (spike counts, ADC steps, SOPs) is an
+      integer-valued f32 well under 2^24, so fold order cannot change a
+      bit.
+
+    The per-round activity plan spans all co-resident slots (gating is
+    output-invariant; only the work changes), and ``skip_acc`` integrates
+    the plan's skipped-block ratio over each request's active steps.
+    Single-layer configs only — the engine serves multi-layer stacks
+    through the legacy drain path.
+    """
+    if len(cfg.layer_widths) > 1:
+        raise ValueError("forward_silicon_stream is single-layer only; "
+                         "serve stacks through the legacy drain path")
+    mode, k = cfg.mode, cfg.k
+    mcfg = macro_lib.CIMMacroConfig(
+        code_bits=cfg.code_bits,
+        mac_range=cfg.mac_range if mode == "kwn" else cfg.dend_range,
+        ima_noise=noise)
+    lif_p = lif_lib.LIFParams(
+        beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
+        noise_amp=cfg.noise_amp if cfg.use_snl else 0.0)
+    fw = _pack_fused(p, cfg, mode, mcfg)
+    snl_active = cfg.use_snl and mode == "kwn"
+    noisy = noise is not None
+    ima_kn = macro_lib.fused_kernel_noise(fw, mcfg)
+    r, slots = events.shape[0], events.shape[1]
+    activity = macro_lib.plan_activity(events, fw, cfg.n_hidden)
+    new_prbs = state.prbs
+    if noisy:
+        noise_t = None          # all noise is generated inside the kernel
+    elif snl_active:
+        def slot_draw(s0):
+            def draw(s, _):
+                s, nz = prbs_lib.prbs_noise(s, (cfg.n_hidden,),
+                                            lif_p.noise_amp)
+                return s, nz
+            return jax.lax.scan(draw, s0, None, length=r)
+        new_prbs, nz = jax.vmap(slot_draw)(state.prbs)
+        noise_t = jnp.moveaxis(nz, 0, 1)                   # (R, S, N)
+    else:
+        noise_t = jnp.zeros((r, slots, cfg.n_hidden))
+    # Per-slot noise-stream control: each slot replays the stream of its
+    # own batch-1 run — its request seed, its absolute step, row id 0.
+    row_ctl = jnp.stack([state.seed, state.steps_done,
+                         jnp.zeros_like(state.seed)], axis=-1)
+    v_out, spk_t, _, steps_t, _ = macro_lib.fused_seq(
+        events, fw, state.v, noise_t, k=k, drive_gain=cfg.drive_gain,
+        beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,
+        v_reset=lif_p.v_reset,
+        v_lim=lif_lib.vmem_limit(lif_p.vmem_bits),
+        use_snl=snl_active, ima_noise=ima_kn,
+        snl_amp=lif_p.noise_amp if (noisy and snl_active) else 0.0,
+        activity=activity, mac_telemetry=False, row_ctl=row_ctl)
+    iota = jnp.arange(r, dtype=jnp.int32)[:, None]
+    active = (state.steps_done[None, :] + iota) < state.length[None, :]
+    af = active.astype(jnp.float32)                        # (R, S)
+    counts = state.counts + jnp.sum(spk_t * af[:, :, None], axis=0)
+    adc = state.adc + jnp.sum(steps_t.astype(jnp.float32) * af, axis=0)
+    sops = state.sops + jnp.sum(
+        jnp.sum(jnp.abs(events), -1) * af, axis=0) * cfg.n_hidden
+    ratio = jnp.clip(1.0 - jnp.mean(activity.astype(jnp.float32)), 0.0, 1.0)
+    skip_acc = state.skip_acc + ratio * jnp.sum(af, axis=0)
+    steps_done = jnp.minimum(state.steps_done + r, state.length)
+    return SiliconStreamState(v=v_out, prbs=new_prbs, counts=counts,
+                              adc=adc, sops=sops, skip_acc=skip_acc,
+                              steps_done=steps_done, length=state.length,
+                              seed=state.seed)
 
 
 def _pack_fused_stack(p, cfg: SNNConfig, mcfg):

@@ -10,6 +10,8 @@ token against a KV cache of the cell's sequence length.
 from __future__ import annotations
 
 import dataclasses
+import functools
+import time
 from typing import Any
 
 import jax
@@ -61,49 +63,77 @@ class EventRequest:
     adc_steps: float | None = None   # mean early-stop ramp steps per time step
     density: float | None = None     # measured |event| rate (set on submit)
     skipped_block_ratio: float | None = None  # batch activity-plan skip rate
+    key: Any = None                  # per-request PRNG key (continuous path)
+    latency_ms: float | None = None  # submit -> eviction wall time
+    sops: float | None = None        # measured synaptic ops per time step
     _order: int | None = dataclasses.field(default=None, repr=False,
                                            compare=False)  # submission index
+    _t_submit: float | None = dataclasses.field(default=None, repr=False,
+                                                compare=False)
+
+
+@functools.lru_cache(maxsize=None)
+def _legacy_forward(cfg, fused: str, noise):
+    """One jitted drain-path forward per (config, cadence, noise model).
+
+    Module-level cache so every engine instance over the same config
+    shares one compiled executable (a per-instance ``jax.jit(lambda ...)``
+    would recompile per engine — ruinous for the serve benchmarks' warm
+    trials).  ``cfg`` (frozen dataclass) and ``noise`` (NamedTuple) are
+    hashable, so they can key the cache and close over the trace.
+    """
+    return jax.jit(lambda p, ev, key: snn_lib.forward_silicon(
+        p, ev, cfg, key, fused=fused, noise=noise))
 
 
 class SNNEventEngine:
-    """Batched event-stream inference on the fused macro kernel.
+    """Event-stream inference on the fused macro kernel, served either by
+    step-granularity *continuous batching* (default) or by legacy
+    drain-the-queue batches.
 
-    The hot loop is one jitted ``forward_silicon(fused=...)`` call per full
-    batch.  With ``time_major=True`` (default) the *entire* event sequence
-    of the batch runs in a single time-major Pallas launch: the T axis is
-    folded into the kernel grid, the LIF membrane stays in VMEM across
-    steps, and weight planes are staged once per sequence — serving cost
-    per request is one kernel launch per batch, with no HBM-visible
-    intermediates and no per-step launch overhead.  ``time_major=False``
-    keeps the PR 1 per-step launch cadence (one fused kernel per time
-    step), useful for measuring exactly that overhead.  Layers wider than
-    one 256x128 macro are tiled inside the kernel either way.  Requests are
-    padded to fixed ``batch_slots`` (dummy rows are all-zero event streams)
-    so the jit cache holds exactly one entry.
+    **Continuous path** (``continuous=True``, auto-selected for
+    time-major single-layer configs).  The engine keeps ``batch_slots``
+    persistent serving slots whose LIF membrane — the SNN analog of an LM
+    engine's KV cache — lives on device in a
+    ``snn.SiliconStreamState`` and is carried across rounds.  Each round
+    advances every occupied slot by ``round_steps`` time steps through
+    one time-major fused kernel launch; between rounds, finished requests
+    are evicted (their slot's accumulators are normalized by *their own*
+    stream length, never the round count) and waiting requests are
+    admitted into the freed slots mid-flight, with the slot state reset
+    on admit.  Mixed stream lengths batch naturally — the batch shape is
+    always ``(round_steps, batch_slots)``, so the jit cache holds one
+    entry regardless of the traffic's length mix.
 
-    ``noise`` (an ``ima.IMANoiseModel``) serves through the *noisy* silicon
-    model — the Fig. 7 conversion-error draws are generated inside the
-    fused kernel by the counter PRNG, so noisy serving keeps the exact same
-    one-launch-per-batch cost profile as clean serving (no pre-drawn noise
-    tensors, no composed fallback), while every batch still gets fresh,
-    reproducible draws from the engine's key stream.
+    Noise is *per-request* on this path: each request's counter-PRNG seed
+    (from ``req.key``, folded from the engine seed by submission index)
+    rides the kernel's ``row_ctl`` lane, and the clean-path SNL PRBS is a
+    per-slot LFSR.  Served logits and ADC telemetry are therefore
+    bitwise-identical to a one-shot batch-1
+    ``forward_silicon(fused="seq")`` of the same request — independent of
+    co-batched traffic, admission order, or scheduling policy.
 
-    The fused kernel is activity-gated: MAC blocks with no events are
-    skipped, at per-(step, row-tile) granularity.  Because requests in a
-    batch share row tiles, one near-silent stream batched with busy ones
-    inherits their occupancy — so with ``pack_by_density=True`` (default)
-    the engine drains the queue in measured-event-density order, packing
-    quiet requests with quiet: batches become density-homogeneous and the
-    skipped-block ratio (reported per request, next to the early-stop
-    ``adc_steps``) approaches what each stream would get alone.  Results
-    are unchanged either way — gating is output-invariant; only the work
-    moves.  Raw-MAC telemetry stays off on this hot path
-    (``forward_silicon`` default).
+    With ``pack_by_density=True`` the admission scheduler uses measured
+    event density as its cost model: it fills free slots with the pending
+    requests closest to the resident batch's mean density (quietest-first
+    into an empty batch), so activity-gated block skipping — which is
+    per row-*tile*, shared across co-resident slots — survives batching.
+    Results are unchanged either way; only the work moves.
+
+    **Legacy path** (``continuous=False``, and the automatic fallback for
+    ``time_major=False`` or multi-layer stacks).  One jitted
+    ``forward_silicon(fused=...)`` call per fixed-size batch of whole
+    sequences, padded to ``batch_slots`` rows; batches are bucketed by
+    stream length (one jit entry per distinct T served).  ``noise`` draws
+    then come from the engine's per-batch key stream, as before.
+
+    Raw-MAC telemetry stays off on both hot paths.
     """
 
     def __init__(self, cfg: snn_lib.SNNConfig, params, batch_slots: int = 64,
                  seed: int = 0, time_major: bool = True, noise=None,
-                 pack_by_density: bool = True):
+                 pack_by_density: bool = True,
+                 continuous: bool | None = None, round_steps: int = 8):
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
@@ -114,11 +144,25 @@ class SNNEventEngine:
         self.completed: list[EventRequest] = []
         self._submitted = 0
         self._key = jax.random.PRNGKey(seed)
-        fused = "seq" if time_major else "step"
-        self._fwd = jax.jit(
-            lambda p, ev, key: snn_lib.forward_silicon(p, ev, cfg, key,
-                                                       fused=fused,
-                                                       noise=noise))
+        self._base_key = jax.random.PRNGKey(seed)
+        self._fused = "seq" if time_major else "step"
+        supported = time_major and len(cfg.layer_widths) == 1
+        if continuous is None:
+            continuous = supported
+        elif continuous and not supported:
+            raise ValueError(
+                "continuous batching needs the time-major fused kernel and "
+                "a single-layer config; pass continuous=False (or leave it "
+                "None to auto-select) for per-step cadence or stacks")
+        self.continuous = continuous
+        self.round_steps = round_steps
+        # continuous-path slot table (host shadows of the device state)
+        self._state = (snn_lib.silicon_stream_init(cfg, batch_slots)
+                       if continuous else None)
+        self._slot_req: list[EventRequest | None] = [None] * batch_slots
+        self._slot_len = np.zeros(batch_slots, np.int32)
+        self._slot_done = np.zeros(batch_slots, np.int32)
+        self._slot_seed = np.zeros(batch_slots, np.int32)
 
     def submit(self, req: EventRequest):
         if req.density is None:
@@ -126,44 +170,193 @@ class SNNEventEngine:
             ev = np.asarray(req.events)
             req.density = float(np.count_nonzero(ev)) / ev.size
         req._order = self._submitted
+        req._t_submit = time.perf_counter()
         self._submitted += 1
         self.pending.append(req)
 
-    def _run_batch(self, reqs: list[EventRequest]):
+    # ------------------------------------------------------------------
+    # Legacy drain path (continuous=False): fixed batches, whole sequences
+    # ------------------------------------------------------------------
+
+    def _run_batch(self, reqs: list[EventRequest]) -> list[EventRequest]:
         ev = jnp.stack([jnp.asarray(r.events, jnp.float32) for r in reqs])
         pad = self.b - ev.shape[0]
         if pad:
             ev = jnp.concatenate(
                 [ev, jnp.zeros((pad,) + ev.shape[1:], ev.dtype)])
         self._key, sub = jax.random.split(self._key)
-        logits, tele = self._fwd(self.params, ev, sub)
+        fwd = _legacy_forward(self.cfg, self._fused, self.noise)
+        logits, tele = fwd(self.params, ev, sub)
         preds = jnp.argmax(logits, axis=-1)
         skipped = tele.get("skipped_block_ratio")
+        t_done = time.perf_counter()
         for i, req in enumerate(reqs):
             req.logits = logits[i]
             req.pred = int(preds[i])
             req.adc_steps = float(tele["adc_steps"][i])
+            req.sops = float(tele["sops"][i])
             if skipped is not None:
                 req.skipped_block_ratio = float(skipped[i])
+            if req._t_submit is not None:
+                req.latency_ms = (t_done - req._t_submit) * 1e3
             self.completed.append(req)
+        return reqs
 
-    def run(self) -> list[EventRequest]:
-        """Drain the queue in fixed-size batches; returns completed requests
-        in submission order.
+    def _take_bucket(self) -> list[EventRequest]:
+        """Next batch off the queue: up to ``b`` requests sharing one T.
 
-        Density packing reorders the *batches* (quiet requests run with
-        quiet), but the returned list is always sorted back to the order
-        the requests were submitted in — callers that zip results against
-        their submission sequence must not see the packing permutation.
+        The legacy launch stacks whole sequences, so a batch must be
+        rectangular; bucketing by stream length (instead of the old
+        ``jnp.stack`` crash) keeps results exact.  Each distinct T compiles
+        its own jit entry — the engine's cache holds one entry *per stream
+        length served*, not one total.
         """
+        t0 = np.asarray(self.pending[0].events).shape[0]
+        batch = [r for r in self.pending
+                 if np.asarray(r.events).shape[0] == t0][:self.b]
+        taken = {id(r) for r in batch}
+        self.pending = [r for r in self.pending if id(r) not in taken]
+        return batch
+
+    def _run_legacy(self) -> list[EventRequest]:
         if self.pack_by_density:
             self.pending.sort(key=lambda r: (r.density or 0.0, r.uid))
+        drained: list[EventRequest] = []
         while self.pending:
-            batch, self.pending = self.pending[:self.b], self.pending[self.b:]
-            self._run_batch(batch)
-        self.completed.sort(
-            key=lambda r: r._order if r._order is not None else r.uid)
-        return self.completed
+            drained.extend(self._run_batch(self._take_bucket()))
+        drained.sort(key=lambda r: r._order if r._order is not None
+                     else r.uid)
+        return drained
+
+    # ------------------------------------------------------------------
+    # Continuous path: step-granularity rounds over persistent slots
+    # ------------------------------------------------------------------
+
+    def _request_seed(self, req: EventRequest) -> int:
+        """Per-request counter-PRNG seed word, assigned at admission.
+
+        Each request gets its own key (folded from the engine seed by
+        submission index unless the caller set ``req.key``), so its noise
+        stream — and therefore its logits — are a pure function of the
+        request, independent of co-batched traffic or admission order.
+        A one-shot ``forward_silicon(p, ev[None], cfg, req.key,
+        fused="seq", noise=...)`` reproduces the served result bitwise.
+        """
+        if req.key is None:
+            req.key = jax.random.fold_in(self._base_key, req._order)
+        if self.noise is None:
+            return 0              # clean serving never reads the seed word
+        return int(snn_lib._noise_seed(req.key))
+
+    def _admit(self) -> None:
+        free = [i for i, r in enumerate(self._slot_req) if r is None]
+        if not free or not self.pending:
+            return
+        if self.pack_by_density:
+            active = [r.density or 0.0
+                      for r in self._slot_req if r is not None]
+            if active:
+                # keep rounds density-homogeneous: nearest-density first
+                target = sum(active) / len(active)
+                self.pending.sort(
+                    key=lambda r: (abs((r.density or 0.0) - target),
+                                   r._order))
+            else:
+                # empty batch: start from the quietest traffic
+                self.pending.sort(key=lambda r: (r.density or 0.0, r._order))
+        chosen, self.pending = (self.pending[:len(free)],
+                                self.pending[len(free):])
+        mask = np.zeros(self.b, bool)
+        for slot, req in zip(free, chosen):
+            self._slot_req[slot] = req
+            self._slot_len[slot] = np.asarray(req.events).shape[0]
+            self._slot_done[slot] = 0
+            self._slot_seed[slot] = self._request_seed(req)
+            mask[slot] = True
+        self._state = snn_lib.silicon_stream_admit(
+            self._state, mask, self._slot_len, self._slot_seed)
+
+    def _round(self) -> None:
+        r = self.round_steps
+        ev = np.zeros((r, self.b, self.cfg.n_in), np.float32)
+        for i, req in enumerate(self._slot_req):
+            if req is None:
+                continue
+            chunk = np.asarray(req.events,
+                               np.float32)[self._slot_done[i]:
+                                           self._slot_done[i] + r]
+            ev[:chunk.shape[0], i, :] = chunk
+        self._state = snn_lib.forward_silicon_stream(
+            self.params, jnp.asarray(ev), self.cfg, self._state,
+            noise=self.noise)
+        self._slot_done = np.minimum(self._slot_done + r, self._slot_len)
+
+    def _evict(self) -> list[EventRequest]:
+        out: list[EventRequest] = []
+        w_out = self.params["w_out"]
+        for i, req in enumerate(self._slot_req):
+            if req is None or self._slot_done[i] < self._slot_len[i]:
+                continue
+            length = float(self._slot_len[i])
+            # batch-1 shaped readout: bitwise-matches the one-shot path
+            logits = (self._state.counts[i][None] / length) @ w_out
+            req.logits = logits[0]
+            req.pred = int(jnp.argmax(logits, axis=-1)[0])
+            # f32 division: matches the one-shot telemetry normalization bit
+            # for bit (tele / t_steps runs in f32 inside the jitted forward)
+            lf = np.float32(length)
+            req.adc_steps = float(np.float32(self._state.adc[i]) / lf)
+            req.sops = float(np.float32(self._state.sops[i]) / lf)
+            req.skipped_block_ratio = float(
+                np.float32(self._state.skip_acc[i]) / lf)
+            if req._t_submit is not None:
+                req.latency_ms = (time.perf_counter() -
+                                  req._t_submit) * 1e3
+            self._slot_req[i] = None
+            self.completed.append(req)
+            out.append(req)
+        return out
+
+    @property
+    def active(self) -> int:
+        """Occupied slot count (continuous path)."""
+        return sum(r is not None for r in self._slot_req)
+
+    def run(self, max_rounds: int | None = None) -> list[EventRequest]:
+        """Serve the queue; returns the requests completed by *this* call,
+        in submission order.
+
+        Continuous path (default): rounds of ``round_steps`` time steps
+        over the persistent slot batch — new requests are admitted into
+        free slots *between rounds* (density-aware when
+        ``pack_by_density``), finished requests are evicted as soon as
+        their own stream ends, and the per-slot LIF membrane carries
+        across rounds on device.  ``max_rounds`` bounds this call (leaving
+        unfinished requests resident for the next ``run()``).
+
+        Legacy path (``continuous=False``): drains in fixed whole-sequence
+        batches, bucketed by stream length.
+
+        Either way the returned list covers only requests drained by this
+        call — history accumulates in ``self.completed`` — and density
+        scheduling never leaks into result order (always submission
+        order) or result values (noise is per-request on the continuous
+        path; the legacy key stream is per-batch as before).
+        """
+        if not self.continuous:
+            return self._run_legacy()
+        drained: list[EventRequest] = []
+        rounds = 0
+        while self.pending or self.active:
+            if max_rounds is not None and rounds >= max_rounds:
+                break
+            self._admit()
+            self._round()
+            drained.extend(self._evict())
+            rounds += 1
+        drained.sort(key=lambda r: r._order if r._order is not None
+                     else r.uid)
+        return drained
 
     def energy_report(self, dataset: str) -> dict:
         """Serving-side energy estimate from *measured* early-stop statistics.
@@ -180,6 +373,13 @@ class SNNEventEngine:
         or the engine serves NLD mode, whose ramp always runs all
         2**code_bits - 1 steps so there is no measured early-stop to
         report.
+
+        Besides the population means, the report carries a
+        ``per_request`` table (one row per completed request: uid,
+        latency, measured ADC steps, per-request pJ/SOP from *that
+        request's* early-stop statistics, density) and — when latencies
+        were measured — the serving SLO summary ``latency_ms_mean`` /
+        ``latency_ms_p50`` / ``latency_ms_p95``.
         """
         done = [r for r in self.completed if r.adc_steps is not None]
         if not done or self.cfg.mode != "kwn":
@@ -207,6 +407,22 @@ class SNNEventEngine:
         if skipped:
             # measured activity-plan saving, next to the early-stop saving
             rep["mean_skipped_block_ratio"] = sum(skipped) / len(skipped)
+        sops_ps = energy_lib.sops_per_step(spike_rate)
+        rep["per_request"] = [
+            {"uid": r.uid,
+             "latency_ms": r.latency_ms,
+             "adc_steps": r.adc_steps,
+             "pj_per_sop": energy_lib.kwn_step_energy(
+                 self.cfg.k, spike_rate,
+                 adc_steps=r.adc_steps).total / sops_ps,
+             "density": r.density}
+            for r in done]
+        lat = sorted(r.latency_ms for r in done if r.latency_ms is not None)
+        if lat:
+            rep["latency_ms_mean"] = sum(lat) / len(lat)
+            rep["latency_ms_p50"] = lat[len(lat) // 2]
+            rep["latency_ms_p95"] = lat[min(len(lat) - 1,
+                                            int(len(lat) * 0.95))]
         return rep
 
 
@@ -238,21 +454,29 @@ class BatchedEngine:
             if self.slots[i] is None and self.pending:
                 req = self.pending.pop(0)
                 self.slots[i] = req
-                # prefill: feed prompt tokens through decode path
+                # prefill: feed prompt tokens through decode path, one
+                # fresh key per step (sampling temperature > 0 must not
+                # see the same draw at every prompt position)
                 for t, tok in enumerate(req.prompt):
+                    self._rng, sub = jax.random.split(self._rng)
                     toks = self._next_token.at[i, 0].set(tok)
                     pos = self.pos.at[i].set(t)
                     nxt, _, self.cache = self.step_fn(
-                        self.params, self.cache, toks, pos, self._rng)
+                        self.params, self.cache, toks, pos, sub)
                     self._next_token = self._next_token.at[i].set(nxt[i])
                 self.pos = self.pos.at[i].set(len(req.prompt))
 
     def run(self, max_rounds: int = 64):
-        while (self.pending or any(self.slots)) and max_rounds > 0:
-            max_rounds -= 1
+        # max_rounds budgets *decode* rounds — admission/prefill work is
+        # never charged against it
+        rounds = 0
+        while self.pending or any(self.slots):
             self._admit()
             if not any(self.slots):
                 break
+            if rounds >= max_rounds:
+                break
+            rounds += 1
             self._rng, sub = jax.random.split(self._rng)
             nxt, _, self.cache = self.step_fn(self.params, self.cache,
                                               self._next_token, self.pos, sub)

@@ -351,9 +351,10 @@ class TestSNNEventEngine:
 
         # pack_by_density=False: this test pins the FIFO batch composition
         # so the direct-forward recomputation below sees the same batch
-        # (density packing itself is covered in tests/test_fused_sparsity.py)
+        # (density packing itself is covered in tests/test_fused_sparsity.py);
+        # continuous=False pins the legacy drain path's per-batch key stream
         engine = SNNEventEngine(cfg, p, batch_slots=4, seed=5,
-                                pack_by_density=False)
+                                pack_by_density=False, continuous=False)
         for i in range(10):   # 2 full batches + 1 partial (padding path)
             engine.submit(EventRequest(uid=i, events=ev[i], label=int(lab[i])))
         done = engine.run()
@@ -389,8 +390,11 @@ class TestSNNEventEngine:
 
         results = {}
         for time_major in (True, False):
+            # continuous=False: the per-step cadence has no continuous
+            # path, and batch-level PRBS threading only matches between
+            # the two legacy cadences
             engine = SNNEventEngine(cfg, p, batch_slots=4, seed=5,
-                                    time_major=time_major)
+                                    time_major=time_major, continuous=False)
             for i in range(3):
                 engine.submit(EventRequest(uid=i, events=ev[i],
                                            label=int(lab[i])))

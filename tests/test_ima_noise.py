@@ -207,11 +207,12 @@ class TestForwardSiliconNoisy:
     def test_noisy_engine_serves_batches(self):
         from repro.serve.engine import EventRequest, SNNEventEngine
         snn, p, ev, lab, cfg = self._setup()
-        # pack_by_density=False pins FIFO batches so the direct-forward
-        # recomputation below sees the engine's exact first batch
+        # pack_by_density=False + continuous=False pin the legacy FIFO
+        # batches so the direct-forward recomputation below sees the
+        # engine's exact first batch and per-batch key stream
         engine = SNNEventEngine(cfg, p, batch_slots=4, seed=5,
                                 noise=ima_lib.IMANoiseModel(),
-                                pack_by_density=False)
+                                pack_by_density=False, continuous=False)
         for i in range(6):
             engine.submit(EventRequest(uid=i, events=ev[i],
                                        label=int(lab[i])))
