@@ -14,7 +14,8 @@ PYTHONPATH_SRC := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST := $(PYTHONPATH_SRC) python -m pytest
 LINT_PATHS := src tests benchmarks examples tools
 
-.PHONY: smoke train-smoke serve-smoke test lint bench bench-check
+.PHONY: smoke train-smoke serve-smoke test lint bench bench-check \
+	tune tune-smoke
 
 # `smoke`, `train-smoke`, and `serve-smoke` partition the fast tier
 # (silicon-training tests are owned by `train-smoke`, serving-engine
@@ -57,3 +58,16 @@ bench-check:
 	$(MAKE) bench
 	python tools/check_bench.py BENCH_fused_macro.json \
 		--baseline /tmp/bench_baseline.json
+
+# Regenerate the persistent tile-plan cache (PLAN_CACHE_fused_macro.json):
+# autotune the canonical launch shapes on this machine and persist the
+# winners plan_tiles will consume.  OBJECTIVE: ms | pj_per_sop | blend.
+OBJECTIVE := ms
+tune:
+	$(PYTHONPATH_SRC) python tools/tune_plans.py --objective $(OBJECTIVE)
+
+# CI smoke for the tune subsystem: one tiny cell, 2 timed iters, written
+# to a throwaway path, asserting the cache round-trips into plan_tiles.
+tune-smoke:
+	$(PYTHONPATH_SRC) python tools/tune_plans.py --smoke \
+		--out /tmp/plan_cache_smoke.json

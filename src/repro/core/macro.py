@@ -251,9 +251,26 @@ def plan_fused_tiles(batch: int, fw: FusedMacroWeights, n_out: int,
                      n_steps: int = 1):
     """Tile plan + macro accounting for one fused launch.
 
+    Parameters
+    ----------
+    batch : flattened batch rows the launch will carry (the leading dims
+        of the event tensor collapsed to one axis).
+    fw : the packed ``FusedMacroWeights`` — supplies the layer geometry
+        (n_in x nc weight planes) and the mode (kwn/nld).
+    n_out : per-neuron output width (== nc in KWN mode; nc / n_branches
+        in NLD mode).
+    n_steps : time steps folded into the kernel grid (1 = single step).
+
     Returns (plan, geometry): the kernel-facing ``TilePlan`` (block sizes,
     padded shapes, grid, resident VMEM bytes) and the ``MacroGeometry`` the
     energy model consumes (physical macro invocations for the layer).
+
+    Delegates to ``kernels.fused_macro.plan_tiles`` with no overrides, so
+    tuned plans from the persistent cache (``docs/TILE_PLANS.md``) apply
+    transparently; with no cache entry this is the PR 4 heuristic.  Every
+    caller that pairs a plan with a separately built activity map must
+    plan through here (or through ``plan_activity``, which does) so both
+    sides resolve the same cache entry.
     """
     from repro.kernels import fused_macro as fused_kernel
     n_in, nc = fw.msb.shape
@@ -267,13 +284,25 @@ def plan_activity(spikes: jax.Array, fw: FusedMacroWeights,
                   n_out: int) -> jax.Array:
     """Occupancy map for a time-major event sequence: the activity plan.
 
-    spikes (T, ..., I) in {-1, 0, +1}; returns the
-    (T, row-tiles, K-tiles) int32 map (1 = the block holds at least one
-    event) matching the tile plan ``plan_fused_tiles`` would pick for this
-    launch — the same map ``fused_seq`` computes internally when none is
-    passed.  Built once per sequence; ``1 - map.mean()`` is the
-    skipped-block ratio the serving telemetry reports next to the KWN
+    Parameters
+    ----------
+    spikes : (T, ..., I) event tensor in {-1, 0, +1}.
+    fw : the packed ``FusedMacroWeights`` for the layer the events drive.
+    n_out : per-neuron output width (as in ``plan_fused_tiles``).
+
+    Returns the (T, row-tiles, K-tiles) int32 map (1 = the block holds at
+    least one event) matching the tile plan ``plan_fused_tiles`` would
+    pick for this launch — the same map ``fused_seq`` computes internally
+    when none is passed.  Built once per sequence; ``1 - map.mean()`` is
+    the skipped-block ratio the serving telemetry reports next to the KWN
     early-stop statistics.
+
+    The map's row-tile/K-tile granularity IS the plan's (bm, bk): both
+    sides plan through ``plan_tiles`` with identical arguments (and no
+    density refinement), so a tuned cache entry (``docs/TILE_PLANS.md``)
+    moves the map and the kernel grid together.  Handing this map to a
+    launch planned with *different* block overrides is a shape error by
+    construction — pass no overrides, or none of the map.
     """
     from repro.kernels import ops as kernel_ops
     s = ternary_lib.ternary_input_encode(spikes)
@@ -392,11 +421,21 @@ def pack_kwn_stack(w_ints, scales, cfg: CIMMacroConfig):
 def plan_fused_stack(batch: int, stack, n_steps: int = 1):
     """Per-layer (TilePlan, MacroGeometry) for a stacked fused launch.
 
-    Layer 0's plan is authoritative for the launch (row tiling + the host
-    activity-map granularity); deeper layers' plans describe the in-kernel
-    MAC tiling and the per-layer macro-invocation count the energy model
-    charges.  Column padding in deep plans is advisory only — the stacked
-    kernel keeps inter-layer widths exact (spikes never leave registers).
+    Parameters
+    ----------
+    batch : flattened batch rows (shared by every layer of the stack).
+    stack : a ``pack_kwn_stack`` result — per-layer packed weights whose
+        widths chain (layer l's n_in == layer l-1's n_out).
+    n_steps : time steps folded into the one stacked launch.
+
+    Returns a list of ``(TilePlan, MacroGeometry)`` pairs, one per layer,
+    via ``plan_fused_tiles`` (so tuned cache entries apply per layer —
+    see ``docs/TILE_PLANS.md``).  Layer 0's plan is authoritative for the
+    launch (row tiling + the host activity-map granularity); deeper
+    layers' plans describe the in-kernel MAC tiling and the per-layer
+    macro-invocation count the energy model charges.  Column padding in
+    deep plans is advisory only — the stacked kernel keeps inter-layer
+    widths exact (spikes never leave registers).
     """
     return [plan_fused_tiles(batch, fw, fw.msb.shape[1], n_steps)
             for fw in stack]

@@ -188,21 +188,72 @@ def _ceil_mult(n: int, m: int) -> int:
     return max(m, ((n + m - 1) // m) * m)
 
 
+def cached_plan_blocks(m: int, k_dim: int, nc: int, n: int, t: int, *,
+                       mode: str, density: float | None = None):
+    """Tuned (bm, bk, bn) from the persistent plan cache, or None.
+
+    The lazy import keeps the planner importable (and the heuristic fully
+    functional) even if the tune package is broken or absent; any cache
+    failure is the cache's to warn about and degrades to None here.
+    """
+    try:
+        from repro.tune import cache as _plan_cache
+        return _plan_cache.lookup(m, k_dim, nc, n, t, mode=mode,
+                                  density=density)
+    except Exception:   # noqa: BLE001 — the cache must never break planning
+        return None
+
+
 def plan_tiles(m: int, k_dim: int, nc: int, n: int, t: int = 1, *,
                mode: str = "kwn", n_branches: int = 1,
                bm: int | None = None, bk: int | None = None,
-               bn: int | None = None) -> TilePlan:
+               bn: int | None = None, density: float | None = None,
+               use_cache: bool = True) -> TilePlan:
     """Pick (bm, bk, bn) and padded shapes for a fused launch.
 
-    Column tiling rules: a layer that fits one macro width (nc <= bn) runs a
-    single unpadded column tile; wider layers tile at ``bn`` (default 128,
-    the physical macro column count) with zero-padded tail columns.  In
-    ``nld`` mode padding must not straddle the branch-major column layout,
-    so the per-branch width n is padded to the smallest n_pad with
-    ``n_branches * n_pad % bn == 0`` and the planes are re-packed per branch.
-    Zero weight columns are MAC-neutral; the KWN sweep additionally masks
-    padded columns out of the ramp (``n_valid``) so they can never steal
-    winner slots.
+    The single tile-planning entry point: ``ops.fused_macro_seq`` (and its
+    VJP), ``core.macro.plan_fused_tiles`` / ``plan_activity`` /
+    ``plan_fused_stack``, and the autotuner all plan through here, so the
+    occupancy map a host-side planner builds always matches the grid the
+    kernel launches with.  See ``docs/TILE_PLANS.md`` for the full field
+    and cache contract.
+
+    Parameters
+    ----------
+    m, k_dim, nc, n : logical launch geometry — flattened batch rows, the
+        contraction (input-event) width, total weight columns, and
+        per-neuron output width.  ``nc == n`` in KWN mode; in NLD mode
+        ``nc == n_branches * n`` (branch-major column planes).
+    t : number of time steps folded into the kernel grid (1 = single step).
+    mode : ``"kwn"`` or ``"nld"`` — NLD changes the column-padding rule.
+    n_branches : dendritic branches per neuron (NLD only).
+    bm, bk, bn : explicit block-size overrides.  Any non-None override
+        pins that axis and **disables the cache lookup entirely** — an
+        explicit plan is an explicit plan (the bench and tuner rely on
+        this to measure exactly the plan they asked for).
+    density : optional measured event density in [0, 1]; refines the cache
+        key to a density bucket.  Callers that share a plan with a
+        separately built activity map (the model/serving paths) must pass
+        the same value at both sites — they pass None — because the cache
+        entry chosen may differ per bucket.
+    use_cache : False bypasses the persistent cache (tuner internals,
+        A/B tests).  Cache misses and every cache failure mode fall
+        through to the heuristic below; a cached plan can only change
+        speed, never output bits (kernel parity contract).
+
+    Returns a ``TilePlan``: the chosen blocks, padded shapes, ``n_valid``
+    and the launch ``grid`` (see the class docstring).
+
+    Heuristic (the fallback, and the baseline every tuned plan is gated
+    against) — column tiling rules: a layer that fits one macro width
+    (nc <= bn) runs a single unpadded column tile; wider layers tile at
+    ``bn`` (default 128, the physical macro column count) with zero-padded
+    tail columns.  In ``nld`` mode padding must not straddle the
+    branch-major column layout, so the per-branch width n is padded to the
+    smallest n_pad with ``n_branches * n_pad % bn == 0`` and the planes
+    are re-packed per branch.  Zero weight columns are MAC-neutral; the
+    KWN sweep additionally masks padded columns out of the ramp
+    (``n_valid``) so they can never steal winner slots.
 
     K tiling aligns with the activity-map granularity (see the module
     docstring): layers narrower than the 256-row physical macro take the
@@ -211,6 +262,11 @@ def plan_tiles(m: int, k_dim: int, nc: int, n: int, t: int = 1, *,
     gating stays meaningful; layers at or past 256 rows tile at the
     physical macro row count.
     """
+    if use_cache and bm is None and bk is None and bn is None:
+        cached = cached_plan_blocks(m, k_dim, nc, n, t, mode=mode,
+                                    density=density)
+        if cached is not None:
+            bm, bk, bn = cached
     bm_ = bm or min(DEFAULT_BM, _ceil_mult(m, 8))
     bk_ = bk or (DEFAULT_BK if k_dim >= DEFAULT_BK else _ceil_mult(k_dim, 128))
     bn_req = bn or DEFAULT_BN

@@ -334,6 +334,13 @@ def fused_macro_multi_seq(x, stack, vs, noises=None, *, ks,
         bk_l, bn_l = tile_shapes[li]
         if li == 0:
             bk_l = plan0.bk               # matches the host activity map
+        elif bk_l is None and bn_l is None:
+            # deep layers reuse any tuned single-layer plan for their
+            # shape, capped to the layer (LayerSpec allows ragged tails)
+            cb = _fused.cached_plan_blocks(
+                m0, k_dim, widths[li], widths[li], t, mode="kwn")
+            if cb is not None:
+                bk_l, bn_l = min(cb.bk, k_dim), min(cb.bn, widths[li])
         specs.append(_fused.LayerSpec(
             k_dim=k_dim, n=widths[li], k=int(ks[li]),
             bk=int(bk_l or min(k_dim, _fused.DEFAULT_BK)),

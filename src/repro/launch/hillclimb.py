@@ -24,11 +24,44 @@ import json
 
 
 from repro.configs import get_config
-from repro.launch import dryrun
 from repro.roofline import flops_model
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "perf_results")
+
+
+def prior_guided_search(candidates, evaluate, *, prior=None, better=None,
+                        patience=None):
+    """Prior-ordered ladder search: the generic core of ``run_cell``.
+
+    Visits ``candidates`` in ``prior`` order (an analytic cost estimate —
+    cheapest-predicted first, so early stopping keeps the most promising
+    measurements), calls ``evaluate(candidate) -> score`` on each, and
+    keeps the best under ``better(new_score, best_score)`` (default: lower
+    is better).  ``patience`` stops the ladder after that many consecutive
+    non-improving measurements — the same confirmed/refuted discipline the
+    perf ladders above apply by hand.  Returns
+    ``(best_candidate, best_score, [(candidate, score), ...])`` over the
+    candidates actually measured.  The tile-plan autotuner
+    (``repro.tune.autotune``) drives this with a roofline prior.
+    """
+    if better is None:
+        better = lambda a, b: a < b   # noqa: E731 — default objective
+    ordered = sorted(candidates, key=prior) if prior is not None \
+        else list(candidates)
+    best = best_score = None
+    results = []
+    stall = 0
+    for cand in ordered:
+        score = evaluate(cand)
+        results.append((cand, score))
+        if best is None or better(score, best_score):
+            best, best_score, stall = cand, score, 0
+        else:
+            stall += 1
+            if patience is not None and stall >= patience:
+                break
+    return best, best_score, results
 
 
 def _analyze(cfg, shape, multi_pod=False, n_micro=8):
@@ -105,6 +138,10 @@ LADDERS = {
 
 
 def run_cell(cell: str, compile_variants: bool = True):
+    # dryrun pulls the full lower/compile stack; import it only when a
+    # ladder actually compiles variants so the search helpers above stay
+    # importable from light-weight callers (the tile-plan autotuner).
+    from repro.launch import dryrun
     arch, shape, ladder = LADDERS[cell]
     os.makedirs(OUT_DIR, exist_ok=True)
     results = []

@@ -1,0 +1,67 @@
+"""Shared measurement instruments: the bench timing loop + event streams.
+
+``benchmarks/bench_fused_macro.py`` and the autotuner must agree on what a
+"median latency" is — a tuned plan picked under one stopwatch and gated
+under another would let clock-skew masquerade as a tuning win.  So the
+timing loop and the bursty event-stream generator live here, and the bench
+aliases them (``bench_fused_macro._time`` *is* ``measure.median_us``).
+
+Both functions are exactly the instruments the bench has carried since
+PR 4; moving them is a relocation, not a re-derivation.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# Per-element event rate inside an active (burst) step of a DVS-like
+# stream.  Shared constant: the bench's density sweep and the tuner's
+# candidate measurements must synthesize the same temporal structure,
+# because the activity planner's skipped-block ratio (and therefore the
+# measured latency ordering of candidate plans) depends on it.
+IN_BURST_DENSITY = 0.2
+
+
+def median_us(fn, args, iters: int = 20) -> float:
+    """Median per-call wall time in microseconds (median over ``iters``
+    timed calls — robust to the scheduler hiccups a mean would absorb)."""
+    out = fn(*args)                       # compile + warm up
+    jax.block_until_ready(out)
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        samples.append(time.perf_counter() - t0)
+    return float(np.median(samples)) * 1e6
+
+
+def median_ms(fn, args, iters: int = 20) -> float:
+    """``median_us`` in milliseconds — the unit the plan cache persists."""
+    return median_us(fn, args, iters=iters) * 1e-3
+
+
+def event_stream(key, density, shape):
+    """Density-d ternary events; bursty (DVS-like) when time-major.
+
+    A (T, M, K) stream at density < IN_BURST_DENSITY is modelled as silent
+    steps plus active steps firing at the in-burst rate (saccade/gesture
+    streams are temporally clustered, which is exactly the structure the
+    per-(step, row-tile, K-tile) activity planner converts into skipped
+    blocks); at or above the in-burst rate every step is active with
+    uniform per-element density.  2-D (single-step) shapes are uniform —
+    one step has no temporal structure to exploit.
+    """
+    k_val, k_el, k_step = jax.random.split(key, 3)
+    tern = jax.random.randint(k_val, shape, -1, 2).astype(jnp.int8)
+    if len(shape) == 3 and density < IN_BURST_DENSITY:
+        active = jax.random.uniform(k_step, (shape[0], 1, 1)) \
+            < (density / IN_BURST_DENSITY)
+        sparse = (jax.random.uniform(k_el, shape) < IN_BURST_DENSITY) & active
+    else:
+        sparse = jax.random.uniform(k_el, shape) < density
+    return (tern * sparse).astype(jnp.int8)

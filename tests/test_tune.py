@@ -1,0 +1,414 @@
+"""Tile-plan cache + autotuner: the contract docs/TILE_PLANS.md documents.
+
+What must hold (and what these tests pin):
+
+* the cache is a *pure perf* layer — a hit changes which launch geometry
+  runs, never an output bit (parity through the cache-consuming default
+  path vs the ``ref.py`` oracle, under multiple cached plans);
+* every cache failure mode (missing file, corrupt JSON, stale version,
+  misaligned entry) degrades to the PR 4 heuristic with a one-shot
+  ``RuntimeWarning`` — never an exception, never a behavior change;
+* lookups are deterministic and keyed exactly as documented (density
+  bucketing goldens, density=None semantics, device-kind isolation);
+* explicit block overrides and ``use_cache=False`` bypass the cache
+  entirely (the tuner and bench measure exactly the plan they name);
+* the tuner's winner meets or beats the heuristic by construction (the
+  heuristic is always a candidate).
+
+The fast subset is curated with explicit ``@pytest.mark.fast`` markers
+(cache semantics are pure-host dict work; the kernel-parity and tuner
+tests pay interpret-mode launches and stay in the default tier).
+"""
+
+from __future__ import annotations
+
+import json
+import warnings
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import ima as ima_lib
+from repro.kernels import fused_macro, ops, ref
+from repro.tune import autotune, cache, measure
+
+
+@pytest.fixture
+def cache_path(tmp_path, monkeypatch):
+    """Point the plan cache at a per-test file; never the repo-root cache."""
+    path = str(tmp_path / "plan_cache.json")
+    monkeypatch.setenv(cache.ENV_PATH, path)
+    monkeypatch.delenv(cache.ENV_DISABLE, raising=False)
+    cache.clear_memo()
+    yield path
+    cache.clear_memo()
+
+
+def _entry(blocks, *, m=8, k_dim=256, nc=128, n=128, t=3, mode="kwn",
+           bucket=cache.ANY_BUCKET, speedup=1.1, device=None):
+    return {
+        "op": "fused_macro_seq",
+        "shape": cache.shape_key(m, k_dim, nc, n, t),
+        "mode": mode,
+        "density_bucket": bucket,
+        "device_kind": device or cache.device_kind(),
+        "plan": {"bm": blocks[0], "bk": blocks[1], "bn": blocks[2]},
+        "speedup_vs_heuristic": speedup,
+    }
+
+
+# ---------------------------------------------------------------------------
+# density bucketing
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+class TestDensityBuckets:
+    def test_golden_bucket_map(self):
+        """Bucket names are cache-key material: this mapping is frozen.
+
+        Moving an edge or renaming a bucket invalidates every persisted
+        entry, so such a change must bump CACHE_VERSION — and this golden.
+        """
+        want = {
+            0.0: "d00-02", 0.01: "d00-02", 0.019: "d00-02",
+            0.02: "d02-07", 0.05: "d02-07",
+            0.075: "d07-15", 0.10: "d07-15",
+            0.15: "d15-35", 0.25: "d15-35",
+            0.35: "d35-75", 0.50: "d35-75",
+            0.75: "d75-100", 1.0: "d75-100",
+        }
+        got = {d: cache.density_bucket(d) for d in want}
+        assert got == want
+
+    def test_bench_densities_land_in_distinct_buckets(self):
+        """Each bench sweep point gets its own bucket (the edges' point)."""
+        buckets = [cache.density_bucket(d)
+                   for d in (0.01, 0.05, 0.10, 0.25, 0.50, 1.0)]
+        assert len(set(buckets)) == len(buckets)
+
+    def test_out_of_range_rejected(self):
+        with pytest.raises(ValueError):
+            cache.density_bucket(1.5)
+        with pytest.raises(ValueError):
+            cache.density_bucket(-0.1)
+
+
+# ---------------------------------------------------------------------------
+# cache round-trip + lookup semantics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+class TestCacheRoundTrip:
+    def test_save_then_lookup_hit(self, cache_path):
+        cache.save_entries([_entry((8, 128, 128), bucket="d02-07")])
+        hit = cache.lookup(8, 256, 128, 128, 3, mode="kwn", density=0.05)
+        assert hit == cache.PlanBlocks(8, 128, 128)
+
+    def test_miss_on_different_shape_and_mode(self, cache_path):
+        cache.save_entries([_entry((8, 128, 128))])
+        assert cache.lookup(8, 256, 128, 128, 4, mode="kwn") is None   # t
+        assert cache.lookup(16, 256, 128, 128, 3, mode="kwn") is None  # m
+        assert cache.lookup(8, 256, 128, 128, 3, mode="nld") is None   # mode
+
+    def test_miss_on_other_device_kind(self, cache_path):
+        cache.save_entries([_entry((8, 128, 128), device="tpu v5 lite")])
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn") is None
+
+    def test_density_none_prefers_any_bucket(self, cache_path):
+        cache.save_entries([
+            _entry((8, 128, 128), bucket="d02-07", speedup=2.0),
+            _entry((8, 256, 128), bucket=cache.ANY_BUCKET, speedup=1.2),
+        ])
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn") \
+            == cache.PlanBlocks(8, 256, 128)
+
+    def test_density_none_falls_back_to_best_speedup(self, cache_path):
+        cache.save_entries([
+            _entry((8, 128, 128), bucket="d02-07", speedup=1.1),
+            _entry((8, 256, 128), bucket="d15-35", speedup=1.7),
+        ])
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn") \
+            == cache.PlanBlocks(8, 256, 128)
+
+    def test_exact_bucket_beats_any(self, cache_path):
+        cache.save_entries([
+            _entry((8, 128, 128), bucket="d02-07"),
+            _entry((8, 256, 128), bucket=cache.ANY_BUCKET),
+        ])
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn",
+                            density=0.05) == cache.PlanBlocks(8, 128, 128)
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn",
+                            density=0.25) == cache.PlanBlocks(8, 256, 128)
+
+    def test_merge_keeps_existing_keys(self, cache_path):
+        cache.save_entries([_entry((8, 128, 128), bucket="d02-07")])
+        cache.save_entries([_entry((8, 256, 128), bucket="d15-35")])
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn",
+                            density=0.05) == cache.PlanBlocks(8, 128, 128)
+        cache.save_entries([_entry((8, 256, 128), bucket="d15-35")],
+                           merge=False)
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn",
+                            density=0.05) is None
+
+    def test_kill_switch_env(self, cache_path, monkeypatch):
+        cache.save_entries([_entry((8, 128, 128))])
+        monkeypatch.setenv(cache.ENV_DISABLE, "0")
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn") is None
+        monkeypatch.setenv(cache.ENV_DISABLE, "1")
+        assert cache.lookup(8, 256, 128, 128, 3, mode="kwn") is not None
+
+    def test_save_rejects_malformed_entries(self, cache_path):
+        with pytest.raises(ValueError):
+            cache.save_entries([{"op": "fused_macro_seq"}])
+        with pytest.raises(ValueError):           # bk not lane-aligned
+            cache.save_entries([_entry((8, 100, 128))])
+
+
+# ---------------------------------------------------------------------------
+# failure modes: degrade to heuristic with a warning, never a crash
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+class TestCacheFallback:
+    def _heuristic(self):
+        return fused_macro.plan_tiles(8, 256, 128, 128, 3, use_cache=False)
+
+    def test_missing_file_is_silent_miss(self, cache_path):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")        # any warning -> failure
+            plan = fused_macro.plan_tiles(8, 256, 128, 128, 3)
+        assert plan == self._heuristic()
+
+    def test_corrupt_json_warns_once_then_heuristic(self, cache_path):
+        with open(cache_path, "w") as f:
+            f.write("{not json")
+        with pytest.warns(RuntimeWarning, match="unreadable"):
+            plan = fused_macro.plan_tiles(8, 256, 128, 128, 3)
+        assert plan == self._heuristic()
+        with warnings.catch_warnings():           # warned once, not per call
+            warnings.simplefilter("error")
+            fused_macro.plan_tiles(8, 256, 128, 128, 3)
+
+    def test_stale_version_warns_then_heuristic(self, cache_path):
+        doc = {"format": cache.CACHE_FORMAT, "version": cache.CACHE_VERSION
+               + 1, "entries": [_entry((8, 128, 128))]}
+        with open(cache_path, "w") as f:
+            json.dump(doc, f)
+        with pytest.warns(RuntimeWarning, match="version"):
+            plan = fused_macro.plan_tiles(8, 256, 128, 128, 3)
+        assert plan == self._heuristic()
+
+    def test_wrong_format_field_warns_then_heuristic(self, cache_path):
+        with open(cache_path, "w") as f:
+            json.dump({"format": "something-else", "version": 1}, f)
+        with pytest.warns(RuntimeWarning, match="not a plan-cache"):
+            plan = fused_macro.plan_tiles(8, 256, 128, 128, 3)
+        assert plan == self._heuristic()
+
+    def test_misaligned_entry_warns_then_heuristic(self, cache_path):
+        # bypass save_entries validation: simulate a stale file tuned
+        # under looser alignment rules than the current kernel's
+        e = _entry((8, 128, 128))
+        e["plan"]["bk"] = 100
+        doc = {"format": cache.CACHE_FORMAT, "version": cache.CACHE_VERSION,
+               "entries": [e]}
+        with open(cache_path, "w") as f:
+            json.dump(doc, f)
+        with pytest.warns(RuntimeWarning, match="stale plan"):
+            plan = fused_macro.plan_tiles(8, 256, 128, 128, 3)
+        assert plan == self._heuristic()
+
+    def test_rewrite_invalidates_memo(self, cache_path):
+        cache.save_entries([_entry((8, 128, 128))])
+        assert fused_macro.plan_tiles(8, 256, 128, 128, 3).bk == 128
+        cache.save_entries([_entry((8, 256, 128))], merge=False)
+        assert fused_macro.plan_tiles(8, 256, 128, 128, 3).bk == 256
+
+
+# ---------------------------------------------------------------------------
+# plan_tiles integration: hit / override / bypass
+# ---------------------------------------------------------------------------
+
+@pytest.mark.fast
+class TestPlanTilesCachePath:
+    def test_cache_hit_changes_blocks(self, cache_path):
+        cache.save_entries([_entry((8, 128, 128))])
+        plan = fused_macro.plan_tiles(8, 256, 128, 128, 3)
+        assert (plan.bm, plan.bk, plan.bn) == (8, 128, 128)
+        assert plan.grid == (1, 3, 1, 2)          # two K tiles now
+
+    def test_explicit_override_bypasses_cache(self, cache_path):
+        cache.save_entries([_entry((8, 128, 128))])
+        plan = fused_macro.plan_tiles(8, 256, 128, 128, 3, bk=256)
+        assert plan.bk == 256 and plan.bm == 8    # heuristic bm, pinned bk
+
+    def test_use_cache_false_bypasses(self, cache_path):
+        cache.save_entries([_entry((8, 128, 128))])
+        plan = fused_macro.plan_tiles(8, 256, 128, 128, 3, use_cache=False)
+        assert plan.bk == 256
+
+    def test_activity_map_matches_cached_plan(self, cache_path):
+        """plan_activity and the kernel's internal planner must agree
+        under a cache hit exactly as they do under the heuristic."""
+        from repro.core import macro as macro_lib
+        cache.save_entries([_entry((8, 128, 128))])
+        cb = ima_lib.nlq_codebook(5, -24, 24)
+        fw = macro_lib.FusedMacroWeights(
+            msb=jnp.zeros((256, 128), jnp.int8),
+            lsb=jnp.zeros((256, 128), jnp.int8),
+            scale=jnp.ones((128,)), boundaries=cb.boundaries,
+            levels=cb.levels, w_dend=None, mode="kwn")
+        spikes = jnp.zeros((3, 8, 256))
+        act = macro_lib.plan_activity(spikes, fw, 128)
+        plan, _ = macro_lib.plan_fused_tiles(8, fw, 128, n_steps=3)
+        assert (plan.bm, plan.bk, plan.bn) == (8, 128, 128)
+        assert act.shape == plan.activity_shape
+
+
+# ---------------------------------------------------------------------------
+# bitwise parity through the cache-consuming path
+# ---------------------------------------------------------------------------
+
+class TestCachedPlanParity:
+    """Outputs must be bit-identical to the oracle under every cached plan.
+
+    Two distinct cached plans (a two-K-tile split and a coarse-row split)
+    are installed in turn; the *default* call path — ``ops.fused_macro_seq``
+    with no block overrides, exactly what the model/serving layers run —
+    must resolve each plan and still match ``ref.fused_macro_seq_ref``
+    bitwise.  Also pins that the cache actually engaged (the grid moved).
+    """
+
+    M, K_DIM, NC, T = 8, 256, 128, 3
+    PLANS = ((8, 128, 128), (16, 256, 128))
+
+    def _operands(self):
+        ks = jax.random.split(jax.random.PRNGKey(42), 5)
+        x = measure.event_stream(ks[0], 0.1, (self.T, self.M, self.K_DIM))
+        tern = lambda k, s: jax.random.randint(k, s, -1, 2).astype(jnp.int8)
+        msb = tern(ks[1], (self.K_DIM, self.NC))
+        lsb = tern(ks[2], (self.K_DIM, self.NC))
+        cb = ima_lib.nlq_codebook(5, -24, 24)
+        scale = jax.random.uniform(ks[3], (self.NC,), minval=0.05,
+                                   maxval=0.3)
+        v = jax.random.normal(ks[4], (self.M, self.NC)) * 0.5
+        return x, msb, lsb, cb, scale, v
+
+    @pytest.mark.parametrize("blocks", PLANS)
+    def test_default_path_matches_oracle_under_cached_plan(
+            self, cache_path, blocks):
+        x, msb, lsb, cb, scale, v = self._operands()
+        cache.save_entries([_entry(blocks, m=self.M, k_dim=self.K_DIM,
+                                   nc=self.NC, n=self.NC, t=self.T)],
+                           merge=False)
+        plan = fused_macro.plan_tiles(self.M, self.K_DIM, self.NC, self.NC,
+                                      self.T)
+        assert (plan.bm, plan.bk, plan.bn) == blocks    # the cache engaged
+        kw = dict(mode="kwn", k=12, drive_gain=0.25)
+        got = ops.fused_macro_seq(x, msb, lsb, cb.boundaries, cb.levels,
+                                  scale, v, None, mac_telemetry=False, **kw)
+        want = ref.fused_macro_seq_ref(x, msb, lsb, cb.boundaries,
+                                       cb.levels, scale, v, None, **kw)
+        want = (want[1], want[2], want[3], want[4][..., 0])
+        for a, b in zip(got[1:], want):
+            assert jnp.array_equal(a, b)
+
+    def test_both_cached_plans_agree_bitwise(self, cache_path):
+        x, msb, lsb, cb, scale, v = self._operands()
+        kw = dict(mode="kwn", k=12, drive_gain=0.25)
+        outs = []
+        for blocks in self.PLANS:
+            cache.save_entries([_entry(blocks, m=self.M, k_dim=self.K_DIM,
+                                       nc=self.NC, n=self.NC, t=self.T)],
+                               merge=False)
+            outs.append(ops.fused_macro_seq(
+                x, msb, lsb, cb.boundaries, cb.levels, scale, v, None,
+                mac_telemetry=False, **kw))
+        for a, b in zip(outs[0][1:], outs[1][1:]):
+            assert jnp.array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# the tuner
+# ---------------------------------------------------------------------------
+
+class TestAutotune:
+    CELL = autotune.TuneCell(8, 256, 128, 128, 3, 0.1)
+
+    def test_candidates_include_heuristic_and_are_deduped(self):
+        cands = autotune.enumerate_candidates(self.CELL)
+        assert autotune.heuristic_blocks(self.CELL) in cands
+        plans = [fused_macro.plan_tiles(
+            self.CELL.m, self.CELL.k_dim, self.CELL.nc, self.CELL.n,
+            self.CELL.t, bm=c[0], bk=c[1], bn=c[2], use_cache=False)
+            for c in cands]
+        assert len({(p.bm, p.bk, p.bn, p.grid) for p in plans}) == len(cands)
+
+    def test_autotune_cell_entry_contract(self, cache_path):
+        entry = autotune.autotune_cell(self.CELL, iters=2, verbose=False)
+        for f in cache.REQUIRED_ENTRY_FIELDS:
+            assert f in entry
+        # the heuristic was measured as a candidate, so the winner meets
+        # or beats it under the shared stopwatch — the >= 1.0 invariant
+        assert entry["speedup_vs_heuristic"] >= 1.0
+        assert entry["n_candidates"] >= 2         # 256-K shape splits
+        assert entry["device_kind"] == cache.device_kind()
+
+    def test_tune_round_trips_into_plan_tiles(self, cache_path):
+        entries, path = autotune.tune((self.CELL,), iters=2, verbose=False)
+        assert path == cache_path
+        buckets = {e["density_bucket"] for e in entries}
+        assert cache.ANY_BUCKET in buckets        # the serving-key rollup
+        cache.clear_memo()
+        plan = fused_macro.plan_tiles(
+            self.CELL.m, self.CELL.k_dim, self.CELL.nc, self.CELL.n,
+            self.CELL.t)
+        won = next(e for e in entries
+                   if e["density_bucket"] == cache.ANY_BUCKET)["plan"]
+        assert (plan.bm, plan.bk, plan.bn) \
+            == (won["bm"], won["bk"], won["bn"])
+
+    def test_objectives_score_shapes(self):
+        h = autotune.Measurement((8, 256, 128), 2.0, 10.0)
+        m = autotune.Measurement((8, 128, 128), 1.0, 20.0)
+        assert autotune._score(m, h, "ms", 0.5) == 1.0
+        assert autotune._score(m, h, "pj_per_sop", 0.5) == 20.0
+        blend = autotune._score(m, h, "blend", 0.5)
+        assert blend == pytest.approx((0.5 ** 0.5) * (2.0 ** 0.5))
+        with pytest.raises(ValueError):
+            autotune.autotune_cell(self.CELL, objective="nope")
+
+    @pytest.mark.fast
+    def test_prior_is_finite_and_orders_candidates(self):
+        cands = autotune.enumerate_candidates(self.CELL)
+        scores = [autotune.prior_seconds(self.CELL, c) for c in cands]
+        assert all(s > 0 and s < float("inf") for s in scores)
+
+    @pytest.mark.fast
+    def test_prior_guided_search_patience(self):
+        from repro.launch.hillclimb import prior_guided_search
+        calls = []
+        best, score, results = prior_guided_search(
+            [3, 1, 2, 5, 4], lambda c: calls.append(c) or float(c),
+            prior=lambda c: c, patience=2)
+        assert (best, score) == (1, 1.0)
+        assert calls == [1, 2, 3]                 # stopped after 2 stalls
+
+    @pytest.mark.fast
+    def test_modeled_energy_penalizes_pad_dilution(self):
+        """A plan that pads K 2x must charge more MAC energy per SOP."""
+        cell = autotune.TuneCell(8, 128, 128, 128, 2, 1.0)
+        x = measure.event_stream(jax.random.PRNGKey(0), 1.0, (2, 8, 128))
+        tight = autotune.modeled_pj_per_sop(cell, (8, 128, 128), x, 20.0)
+        padded = autotune.modeled_pj_per_sop(cell, (8, 256, 128), x, 20.0)
+        assert padded > tight
+
+    @pytest.mark.fast
+    def test_modeled_energy_rewards_fine_gating(self):
+        """Events confined to one K tile: fine blocks skip, coarse pay."""
+        cell = autotune.TuneCell(8, 512, 128, 128, 2, 0.05)
+        x = jnp.zeros((2, 8, 512), jnp.int8).at[:, :, :128].set(1)
+        fine = autotune.modeled_pj_per_sop(cell, (8, 128, 128), x, 20.0)
+        coarse = autotune.modeled_pj_per_sop(cell, (8, 512, 128), x, 20.0)
+        assert fine < coarse

@@ -10,7 +10,9 @@ Two checks, stdlib only (runs in the minimal container and in CI):
    (``REQUIRED_OPS`` — the clean-path serving ops plus the ``train_step``
    rows the silicon-training subsystem added) must each appear at least
    once, so a refactor cannot silently drop a tracked hot path from the
-   artifact.
+   artifact.  Ops in ``MIN_SPEEDUP_OPS`` additionally carry a speedup
+   floor — ``tuned_vs_heuristic`` must report >= 1.0, the autotuner's
+   structural invariant.
 
 2. **Regression gate** (``--baseline PATH``): every *tracked clean-path*
    record (``mode == "kwn"`` with a baseline median of at least
@@ -47,15 +49,22 @@ RECORD_TYPES = {"op": str, "shape": str, "mode": str,
 MODES = {"kwn", "kwn+noise"}
 # Every tracked hot path must appear in the artifact at least once:
 # the serving-side fused ops, the training-side step rows (software
-# BPTT baseline + the fused-VJP silicon step, clean and noisy QAT), and
-# the end-to-end serving rows (continuous-batching engine vs the
-# drain-the-queue baseline over the mixed-length request trace).
+# BPTT baseline + the fused-VJP silicon step, clean and noisy QAT), the
+# end-to-end serving rows (continuous-batching engine vs the
+# drain-the-queue baseline over the mixed-length request trace), and the
+# autotuner rows (cache-tuned tile plan vs the heuristic plan, per cell).
 REQUIRED_OPS = {"composed_step", "fused_step", "fused_seq_time_major",
                 "fused_seq_noisy", "fused_seq_gated", "fused_seq_dense",
                 "fused_seq_2layer", "fused_seq_2layer_roundtrip",
                 "train_step_bptt", "train_step_silicon_vjp",
                 "serve_stream_drain", "serve_stream_continuous",
-                "serve_stream_noisy"}
+                "serve_stream_noisy",
+                "fused_seq_heuristic_plan", "tuned_vs_heuristic"}
+# The autotuner's structural invariant (the heuristic is always in the
+# candidate set, and the bench re-measures both plans in the same run and
+# reports the better one as tuned): a tuned_vs_heuristic row below 1.0
+# means the plan-resolution path regressed, not that a machine got noisy.
+MIN_SPEEDUP_OPS = {"tuned_vs_heuristic": 1.0}
 NORMALIZER = ("composed_step", "128x256x128", "kwn")
 TRACKED_MODE = "kwn"   # clean path only: noise overhead is measured, not gated
 MIN_TRACKED_MS = 5.0   # below this, interpret-mode medians are pure jitter
@@ -87,6 +96,11 @@ def check_schema(doc: dict) -> list[str]:
         if isinstance(rec["density"], (int, float)) \
                 and not 0.0 <= rec["density"] <= 1.0:
             errs.append(f"records[{i}].density: {rec['density']} not in [0,1]")
+        floor = MIN_SPEEDUP_OPS.get(rec["op"])
+        if floor is not None and isinstance(rec["speedup"], (int, float)) \
+                and rec["speedup"] < floor:
+            errs.append(f"records[{i}] ({rec['op']} @ {rec['shape']}): "
+                        f"speedup {rec['speedup']} < required {floor}")
     seen_ops = {rec.get("op") for rec in records if isinstance(rec, dict)}
     missing = REQUIRED_OPS - seen_ops
     if missing:
