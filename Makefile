@@ -14,17 +14,18 @@ PYTHONPATH_SRC := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST := $(PYTHONPATH_SRC) python -m pytest
 LINT_PATHS := src tests benchmarks examples tools
 
-.PHONY: smoke train-smoke serve-smoke test lint bench bench-check \
-	tune tune-smoke
+.PHONY: smoke train-smoke serve-smoke chaos-smoke test lint bench \
+	bench-check tune tune-smoke
 
 # `smoke`, `train-smoke`, and `serve-smoke` partition the fast tier
-# (silicon-training tests are owned by `train-smoke`, serving-engine
-# tests by `serve-smoke`), so CI can run all three without executing
-# anything twice; together they are the whole tier-1 set.
+# (silicon-training tests are owned by `train-smoke`, serving-engine and
+# preemption tests by `serve-smoke`), so CI can run all three without
+# executing anything twice; together they are the whole tier-1 set.
 smoke:
 	$(PYTEST) -q -m "fast and not slow" \
 		--ignore=tests/test_silicon_train.py \
-		--ignore=tests/test_serve_engine.py
+		--ignore=tests/test_serve_engine.py \
+		--ignore=tests/test_serve_preempt.py
 
 # Tier-1 silicon-training gate: the 20-step loss-decrease smoke plus the
 # fast-marked gradient-parity subset of tests/test_silicon_train.py.
@@ -33,9 +34,17 @@ train-smoke:
 
 # Tier-1 serving gate: continuous-batching engine parity (bitwise vs the
 # one-shot forward, clean and noisy), scheduler/bucketing bugfix pins,
-# and the BatchedEngine rng/round accounting tests.
+# the BatchedEngine rng/round accounting tests, and the preemptive-
+# scheduling suite (checkpoint/restore parity, shedding, validation).
 serve-smoke:
-	$(PYTEST) -q -m "fast and not slow" tests/test_serve_engine.py
+	$(PYTEST) -q -m "fast and not slow" tests/test_serve_engine.py \
+		tests/test_serve_preempt.py
+
+# Chaos gate: adversarial serving traces (oversized bursts, malformed
+# tensors, randomized mid-round preemptions, hog+shorts fairness,
+# deadline storms) with hard invariant assertions; nonzero on violation.
+chaos-smoke:
+	$(PYTHONPATH_SRC) python tools/chaos_serve.py --smoke
 
 test:
 	$(PYTEST) -x -q

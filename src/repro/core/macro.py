@@ -362,6 +362,28 @@ def fused_step(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
     return v_out, spk, mask, steps, mac
 
 
+def stream_row_ctl(seeds: jax.Array, step_offsets: jax.Array,
+                   row_ids: jax.Array | None = None) -> jax.Array:
+    """Per-slot noise-stream control lane for resumable serving.
+
+    Builds the ``(S, 3) = [seed, step_offset, row_id]`` int32 tensor the
+    fused kernel's ``row_ctl`` path consumes: slot ``s`` replays the
+    counter-PRNG stream of an independent batch-1 run keyed on its own
+    request ``seeds[s]``, positioned at absolute stream step
+    ``step_offsets[s]``.  ``row_ids`` defaults to all-zero — every slot
+    claims batch row 0 of its virtual batch-1 run, which is precisely what
+    makes slot state *relocatable*: a checkpointed slot can be restored
+    into ANY free slot (``snn.silicon_stream_restore``) and the replayed
+    stream is unchanged, because nothing in the noise keying ever sees the
+    physical slot index.
+    """
+    seeds = jnp.asarray(seeds, jnp.int32)
+    rows = (jnp.zeros_like(seeds) if row_ids is None
+            else jnp.asarray(row_ids, jnp.int32))
+    return jnp.stack(
+        [seeds, jnp.asarray(step_offsets, jnp.int32), rows], axis=-1)
+
+
 def fused_seq(spikes: jax.Array, fw: FusedMacroWeights, v: jax.Array,
               noise: jax.Array | None = None, *, k: int = 12,
               drive_gain: float = 1.0, beta: float = 0.9,

@@ -106,6 +106,55 @@ def _unpad_cols(a, n: int, n_pad: int, n_branches: int):
     return branched[..., :n].reshape(*lead, n_branches * n)
 
 
+def event_stream_issues(events, n_in: int | None = None):
+    """Host-side check of the fused kernels' event-tensor input contract.
+
+    The kernels consume a ``(T, n_in)`` ternary tensor — finite values in
+    {-1, 0, +1}, a real-number dtype, at least one time step.  Anything
+    else either crashes the launch with an opaque shape error or, worse,
+    flows through the MAC as silent garbage (NaNs propagate into every
+    membrane the slot touches for the rest of the round).  This is the
+    single source of truth the serving layer's submit-time validation
+    (``serve.lifecycle.validate_events``) consults *before* any kernel
+    launch is staged.
+
+    Pure numpy (no device dispatch on the submit path).  Returns
+    ``(ev, issues)``: the ``np.ndarray`` view of ``events`` (or None when
+    the dtype cannot even be materialized) and a list of
+    ``(code, message)`` pairs with codes ``dtype`` / ``shape`` / ``empty``
+    / ``nonfinite`` / ``nonternary``; an empty list means the tensor is
+    launchable as-is.
+    """
+    import numpy as np
+    issues: list[tuple[str, str]] = []
+    try:
+        ev = np.asarray(events)
+    except Exception as e:   # ragged lists, arbitrary objects
+        return None, [("dtype", f"events not array-like ({e})")]
+    if ev.dtype == object or ev.dtype.kind in "USVcM":
+        return ev, [("dtype", f"events dtype {ev.dtype} is not a real "
+                              f"number type")]
+    if ev.ndim != 2:
+        issues.append(("shape", f"events must be (T, n_in); got shape "
+                                f"{ev.shape}"))
+    elif n_in is not None and ev.shape[1] != n_in:
+        issues.append(("shape", f"events width {ev.shape[1]} != engine "
+                                f"n_in {n_in}"))
+    if ev.size == 0:
+        issues.append(("empty", f"zero-length event stream (shape "
+                                f"{ev.shape})"))
+        return ev, issues
+    if ev.dtype.kind == "f" and not bool(np.isfinite(ev).all()):
+        issues.append(("nonfinite", "events carry NaN/Inf values"))
+        return ev, issues     # ternary test on NaNs would double-report
+    if not bool(np.isin(ev, (-1.0, 0.0, 1.0)).all()):
+        bad = ev[~np.isin(ev, (-1.0, 0.0, 1.0))]
+        issues.append(("nonternary",
+                       f"events must be ternary in {{-1, 0, +1}}; got "
+                       f"{bad.flat[0]!r} (and {bad.size - 1} more)"))
+    return ev, issues
+
+
 def fused_activity_map(xm: jax.Array, plan) -> jax.Array:
     """Per-(step, row-tile, K-tile) occupancy of a padded time-major input.
 

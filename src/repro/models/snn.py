@@ -17,6 +17,7 @@ from typing import Any, NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import dendrite as dendrite_lib
 from repro.core import ima as ima_lib
@@ -619,6 +620,91 @@ def silicon_stream_admit(state: SiliconStreamState, mask, lengths,
         seed=jnp.asarray(seeds, jnp.int32))
 
 
+class SlotCheckpoint(NamedTuple):
+    """Host-side snapshot of one serving slot's mid-flight stream state.
+
+    Everything a preempted request needs to resume bitwise-exactly, pulled
+    off device with ``silicon_stream_save`` and pushed back with
+    ``silicon_stream_restore`` — into *any* free slot, not necessarily the
+    one it left.  Relocatability holds because nothing in the stream's
+    noise keying sees the physical slot index: the noisy counter-PRNG
+    stream is keyed on ``(seed, absolute step, row 0)`` through the
+    kernel's ``row_ctl`` lane (``macro.stream_row_ctl``), and the clean
+    SNL stream is the per-slot PRBS LFSR word captured here.  The
+    membrane ``v`` and the accumulators are exact f32/i32 copies, so a
+    restore followed by the remaining rounds reproduces the uninterrupted
+    run bit for bit.
+    """
+
+    v: np.ndarray          # (N,) f32 LIF membrane at the preemption point
+    prbs: int              # uint32 PRBS LFSR word (clean-path SNL stream)
+    counts: np.ndarray     # (N,) f32 spike-count accumulator
+    adc: float             # summed early-stop ADC ramp steps so far
+    sops: float            # summed synaptic operations so far
+    skip_acc: float        # summed per-step skipped-block ratio so far
+    steps_done: int        # absolute stream offset to resume at
+    length: int            # request sequence length
+    seed: int              # per-request counter-PRNG seed word
+
+
+def silicon_stream_save(state: SiliconStreamState,
+                        slot: int) -> SlotCheckpoint:
+    """Checkpoint slot ``slot`` to host memory (one device->host pull).
+
+    The slot's rows are copied out as-is; the device state is left
+    untouched (the engine re-admits over the stale rows, which
+    ``silicon_stream_admit`` / ``silicon_stream_restore`` fully reset).
+    """
+    return SlotCheckpoint(
+        v=np.asarray(state.v[slot]),
+        prbs=int(np.asarray(state.prbs[slot])),
+        counts=np.asarray(state.counts[slot]),
+        adc=float(np.asarray(state.adc[slot])),
+        sops=float(np.asarray(state.sops[slot])),
+        skip_acc=float(np.asarray(state.skip_acc[slot])),
+        steps_done=int(np.asarray(state.steps_done[slot])),
+        length=int(np.asarray(state.length[slot])),
+        seed=int(np.asarray(state.seed[slot])))
+
+
+@jax.jit
+def _stream_restore(state: SiliconStreamState, slot, v, prbs, counts, adc,
+                    sops, skip_acc, steps_done, length,
+                    seed) -> SiliconStreamState:
+    return SiliconStreamState(
+        v=state.v.at[slot].set(v),
+        prbs=state.prbs.at[slot].set(prbs),
+        counts=state.counts.at[slot].set(counts),
+        adc=state.adc.at[slot].set(adc),
+        sops=state.sops.at[slot].set(sops),
+        skip_acc=state.skip_acc.at[slot].set(skip_acc),
+        steps_done=state.steps_done.at[slot].set(steps_done),
+        length=state.length.at[slot].set(length),
+        seed=state.seed.at[slot].set(seed))
+
+
+def silicon_stream_restore(state: SiliconStreamState, slot: int,
+                           ckpt: SlotCheckpoint) -> SiliconStreamState:
+    """Restore a ``SlotCheckpoint`` into slot ``slot`` (any free slot).
+
+    The inverse of ``silicon_stream_save``: one jitted scatter writes the
+    checkpoint's membrane, PRBS word, accumulators, and stream position
+    into the slot's rows.  The next ``forward_silicon_stream`` round picks
+    the stream up at ``ckpt.steps_done`` — the ``row_ctl`` lane replays
+    the noisy counter stream from exactly that offset and the restored
+    LFSR word continues the clean SNL stream, so the request's final
+    results are bitwise-identical to never having been preempted
+    (pinned by tests/test_serve_preempt.py across slots, co-residents,
+    and non-round-aligned offsets).
+    """
+    return _stream_restore(
+        state, jnp.int32(slot), jnp.asarray(ckpt.v, jnp.float32),
+        jnp.uint32(ckpt.prbs), jnp.asarray(ckpt.counts, jnp.float32),
+        jnp.float32(ckpt.adc), jnp.float32(ckpt.sops),
+        jnp.float32(ckpt.skip_acc), jnp.int32(ckpt.steps_done),
+        jnp.int32(ckpt.length), jnp.int32(ckpt.seed))
+
+
 @functools.partial(jax.jit, static_argnames=("cfg", "noise"))
 def forward_silicon_stream(p, events, cfg: SNNConfig,
                            state: SiliconStreamState,
@@ -629,6 +715,11 @@ def forward_silicon_stream(p, events, cfg: SNNConfig,
     ``events`` is the *time-major* (R, S, N_in) round block the engine
     staged — slot s carries steps ``[steps_done[s], steps_done[s] + R)``
     of its request's event stream, zero-padded past the request's end.
+    R is whatever leading extent the caller staged: the engine's regular
+    cadence uses ``round_steps``, and *partial* rounds (R <
+    ``round_steps``, the preemption path that stops a stream at a
+    non-round-aligned offset) are the same launch at a shorter extent —
+    each distinct R compiles one jit entry, bounded by ``round_steps``.
     Runs one fused time-major kernel launch (LIF membrane in VMEM within
     the round, carried across rounds through ``state.v``) and folds this
     round's spikes/ADC-steps/SOPs into the per-slot accumulators, masking
@@ -686,8 +777,7 @@ def forward_silicon_stream(p, events, cfg: SNNConfig,
         noise_t = jnp.zeros((r, slots, cfg.n_hidden))
     # Per-slot noise-stream control: each slot replays the stream of its
     # own batch-1 run — its request seed, its absolute step, row id 0.
-    row_ctl = jnp.stack([state.seed, state.steps_done,
-                         jnp.zeros_like(state.seed)], axis=-1)
+    row_ctl = macro_lib.stream_row_ctl(state.seed, state.steps_done)
     v_out, spk_t, _, steps_t, _ = macro_lib.fused_seq(
         events, fw, state.v, noise_t, k=k, drive_gain=cfg.drive_gain,
         beta=cfg.beta, v_th1=cfg.v_th1, v_th2=cfg.v_th2,

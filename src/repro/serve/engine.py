@@ -11,8 +11,9 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 import time
-from typing import Any
+from typing import Any, Callable
 
 import jax
 import jax.numpy as jnp
@@ -21,6 +22,7 @@ import numpy as np
 from repro.core import energy as energy_lib
 from repro.models import lm
 from repro.models import snn as snn_lib
+from repro.serve import lifecycle
 
 
 def build_serve_step(cfg: lm.LMConfig, mesh=None, *, temperature: float = 0.0):
@@ -53,7 +55,15 @@ class Request:
 
 @dataclasses.dataclass
 class EventRequest:
-    """One event-stream classification request: events (T, N_in) in {-1,0,1}."""
+    """One event-stream classification request: events (T, N_in) in {-1,0,1}.
+
+    ``priority`` (higher wins) and ``deadline_ms`` (wall milliseconds from
+    submission) feed the preemptive scheduler; both default to "no
+    opinion", under which the engine behaves exactly like the plain
+    continuous-batching engine (no preemption ever triggers).  ``state``
+    walks the ``serve.lifecycle`` machine and always ends in a terminal
+    state — COMPLETED, EXPIRED, or REJECTED.
+    """
 
     uid: int
     events: Any                 # (T, N_in) array-like
@@ -66,10 +76,17 @@ class EventRequest:
     key: Any = None                  # per-request PRNG key (continuous path)
     latency_ms: float | None = None  # submit -> eviction wall time
     sops: float | None = None        # measured synaptic ops per time step
+    priority: int = 0                # scheduler priority (higher preempts)
+    deadline_ms: float | None = None  # SLO deadline, wall ms from submit
+    state: str = lifecycle.QUEUED    # lifecycle state (see serve.lifecycle)
+    preemptions: int = 0             # times this request was checkpointed out
+    deadline_missed: bool | None = None  # completed after its deadline?
     _order: int | None = dataclasses.field(default=None, repr=False,
                                            compare=False)  # submission index
     _t_submit: float | None = dataclasses.field(default=None, repr=False,
                                                 compare=False)
+    _ckpt: Any = dataclasses.field(default=None, repr=False, compare=False)
+    _not_before: int = dataclasses.field(default=0, repr=False, compare=False)
 
 
 @functools.lru_cache(maxsize=None)
@@ -127,13 +144,43 @@ class SNNEventEngine:
     stream length (one jit entry per distinct T served).  ``noise`` draws
     then come from the engine's per-batch key stream, as before.
 
+    **Robustness layer** (this is what turns the round loop into something
+    that can face real traffic; see ``docs/SERVING.md``):
+
+    * *Validation*: ``submit()`` rejects malformed event tensors with the
+      typed ``serve.lifecycle`` errors before anything is staged for a
+      kernel launch (``validate=False`` opts out for trusted callers).
+    * *Load shedding*: with ``max_pending`` set, the admission queue is
+      bounded — an overflowing submit sheds the lowest-priority (then
+      newest) queued request with the terminal ``REJECTED`` state instead
+      of growing without bound.
+    * *Deadlines*: a queued request whose ``deadline_ms`` passes before it
+      can be admitted is retired with the terminal ``EXPIRED`` state
+      (resident requests always run to completion — finishing beats
+      killing mid-stream).
+    * *Preemption* (continuous path, ``preemptive=True``): when the queue
+      holds a higher-priority or deadline-at-risk request and no slot is
+      free, the scheduler checkpoints the longest-running lowest-priority
+      slot to host memory (``snn.SlotCheckpoint``) and admits the urgent
+      request.  The victim re-enters the queue with exponential backoff
+      (``backoff_rounds * 2**(preemptions-1)`` scheduling ticks) and
+      resumes from its checkpoint — in any free slot, at its exact step
+      offset — bitwise-identical to an uninterrupted run.  Thrash guards:
+      a slot must be resident ``preempt_quantum`` rounds before it is a
+      victim, a request is never preempted more than ``max_preemptions``
+      times, and at most one preemption happens per scheduling tick.
+
     Raw-MAC telemetry stays off on both hot paths.
     """
 
     def __init__(self, cfg: snn_lib.SNNConfig, params, batch_slots: int = 64,
                  seed: int = 0, time_major: bool = True, noise=None,
                  pack_by_density: bool = True,
-                 continuous: bool | None = None, round_steps: int = 8):
+                 continuous: bool | None = None, round_steps: int = 8,
+                 max_pending: int | None = None, preemptive: bool = True,
+                 preempt_quantum: int = 1, max_preemptions: int = 3,
+                 backoff_rounds: int = 1, risk_margin_ms: float | None = None,
+                 validate: bool = True):
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
@@ -142,6 +189,8 @@ class SNNEventEngine:
         self.pack_by_density = pack_by_density
         self.pending: list[EventRequest] = []
         self.completed: list[EventRequest] = []
+        self.rejected: list[EventRequest] = []
+        self.expired: list[EventRequest] = []
         self._submitted = 0
         self._key = jax.random.PRNGKey(seed)
         self._base_key = jax.random.PRNGKey(seed)
@@ -156,6 +205,19 @@ class SNNEventEngine:
                 "None to auto-select) for per-step cadence or stacks")
         self.continuous = continuous
         self.round_steps = round_steps
+        self.max_pending = max_pending
+        self.preemptive = preemptive
+        self.preempt_quantum = preempt_quantum
+        self.max_preemptions = max_preemptions
+        self.backoff_rounds = backoff_rounds
+        # deadline-risk margin: a deadline-bearing candidate counts as
+        # at-risk when its estimated slack falls under this many wall ms.
+        # None = auto (two rounds at the measured EMA round time).
+        self.risk_margin_ms = risk_margin_ms
+        self.validate = validate
+        self.preemption_count = 0        # total preemptions (policy + forced)
+        self._rounds_total = 0           # monotonic scheduling-tick counter
+        self._round_ms = 0.0             # EMA wall ms per round (estimates)
         # continuous-path slot table (host shadows of the device state)
         self._state = (snn_lib.silicon_stream_init(cfg, batch_slots)
                        if continuous else None)
@@ -163,16 +225,45 @@ class SNNEventEngine:
         self._slot_len = np.zeros(batch_slots, np.int32)
         self._slot_done = np.zeros(batch_slots, np.int32)
         self._slot_seed = np.zeros(batch_slots, np.int32)
+        self._slot_admit_round = np.zeros(batch_slots, np.int64)
 
-    def submit(self, req: EventRequest):
+    def submit(self, req: EventRequest) -> EventRequest:
+        """Enqueue a request; returns it with ``state`` set.
+
+        Raises a typed ``serve.lifecycle`` error (``EmptyEventError`` /
+        ``EventDtypeError`` / ``EventShapeError`` / ``NonFiniteEventError``
+        / ``NonTernaryEventError``) if the event tensor violates the kernel
+        input contract — nothing malformed ever reaches a launch.  With a
+        bounded queue (``max_pending``), an overflowing submit sheds the
+        lowest-priority / newest request instead: the shed request (which
+        may be ``req`` itself) gets the terminal ``REJECTED`` state and is
+        recorded in ``self.rejected``.
+        """
+        if self.validate:
+            lifecycle.validate_events(req.events, self.cfg.n_in)
         if req.density is None:
             # host-side numpy: no device dispatch/sync on the submit path
             ev = np.asarray(req.events)
             req.density = float(np.count_nonzero(ev)) / ev.size
         req._order = self._submitted
         req._t_submit = time.perf_counter()
+        req.state = lifecycle.QUEUED
         self._submitted += 1
+        if self.max_pending is not None and \
+                len(self.pending) >= self.max_pending:
+            # shed the least valuable: lowest priority, then newest arrival
+            # (never shed a preempted request holding a checkpoint — its
+            # work would be lost; shedding fresh work is strictly cheaper)
+            victims = [r for r in self.pending + [req] if r._ckpt is None]
+            victim = min(victims or [req],
+                         key=lambda r: (r.priority, -r._order))
+            victim.state = lifecycle.REJECTED
+            self.rejected.append(victim)
+            if victim is req:
+                return req
+            self.pending.remove(victim)
         self.pending.append(req)
+        return req
 
     # ------------------------------------------------------------------
     # Legacy drain path (continuous=False): fixed batches, whole sequences
@@ -199,6 +290,9 @@ class SNNEventEngine:
                 req.skipped_block_ratio = float(skipped[i])
             if req._t_submit is not None:
                 req.latency_ms = (t_done - req._t_submit) * 1e3
+            req.state = lifecycle.COMPLETED
+            if req.deadline_ms is not None and req.latency_ms is not None:
+                req.deadline_missed = req.latency_ms > req.deadline_ms
             self.completed.append(req)
         return reqs
 
@@ -219,6 +313,7 @@ class SNNEventEngine:
         return batch
 
     def _run_legacy(self) -> list[EventRequest]:
+        self._expire_pending()
         if self.pack_by_density:
             self.pending.sort(key=lambda r: (r.density or 0.0, r.uid))
         drained: list[EventRequest] = []
@@ -248,36 +343,206 @@ class SNNEventEngine:
             return 0              # clean serving never reads the seed word
         return int(snn_lib._noise_seed(req.key))
 
+    # --- deadline bookkeeping -----------------------------------------
+
+    def _expire_pending(self) -> None:
+        """Retire queued requests whose deadline has already passed.
+
+        Only *queued* requests expire — a resident request always runs to
+        completion (its work is already partly paid for; finishing late
+        beats discarding mid-stream).  Expired requests reach the terminal
+        ``EXPIRED`` state and land in ``self.expired``.
+        """
+        if not any(r.deadline_ms is not None for r in self.pending):
+            return
+        now = time.perf_counter()
+        keep: list[EventRequest] = []
+        for r in self.pending:
+            if r.deadline_ms is not None and r._t_submit is not None and \
+                    (now - r._t_submit) * 1e3 > r.deadline_ms:
+                r.state = lifecycle.EXPIRED
+                self.expired.append(r)
+            else:
+                keep.append(r)
+        self.pending = keep
+
+    def _slack_ms(self, req: EventRequest, now: float) -> float:
+        """Estimated deadline slack in wall ms (+inf if no deadline).
+
+        slack = deadline - elapsed - (remaining rounds x EMA round time).
+        A checkpointed request's remaining work starts at its recorded
+        step offset, so a mostly-done preempted request reads as *less*
+        at-risk than a fresh one with the same deadline.
+        """
+        if req.deadline_ms is None or req._t_submit is None:
+            return math.inf
+        elapsed = (now - req._t_submit) * 1e3
+        if req._ckpt is not None:
+            t, done = req._ckpt.length, req._ckpt.steps_done
+        else:
+            t, done = np.asarray(req.events).shape[0], 0
+        est = math.ceil((t - done) / self.round_steps) * self._round_ms
+        return req.deadline_ms - elapsed - est
+
+    # --- admission ----------------------------------------------------
+
     def _admit(self) -> None:
         free = [i for i, r in enumerate(self._slot_req) if r is None]
         if not free or not self.pending:
             return
-        if self.pack_by_density:
+        # backoff gate: a freshly preempted request sits out its
+        # exponential-backoff window (measured in scheduling ticks, which
+        # advance even on idle rounds, so the window always expires)
+        eligible = [r for r in self.pending
+                    if r._not_before <= self._rounds_total]
+        if not eligible:
+            return
+        scheduled = any(r.priority != 0 or r.deadline_ms is not None
+                        or r._ckpt is not None for r in eligible)
+        if scheduled:
+            # urgency order: priority first, then tightest deadline slack,
+            # then submission order (total order -> deterministic)
+            now = time.perf_counter()
+            eligible.sort(key=lambda r: (-r.priority,
+                                         self._slack_ms(r, now), r._order))
+        elif self.pack_by_density:
             active = [r.density or 0.0
                       for r in self._slot_req if r is not None]
             if active:
                 # keep rounds density-homogeneous: nearest-density first
                 target = sum(active) / len(active)
-                self.pending.sort(
+                eligible.sort(
                     key=lambda r: (abs((r.density or 0.0) - target),
                                    r._order))
             else:
                 # empty batch: start from the quietest traffic
-                self.pending.sort(key=lambda r: (r.density or 0.0, r._order))
-        chosen, self.pending = (self.pending[:len(free)],
-                                self.pending[len(free):])
+                eligible.sort(key=lambda r: (r.density or 0.0, r._order))
+        chosen = eligible[:len(free)]
+        taken = {id(r) for r in chosen}
+        self.pending = [r for r in self.pending if id(r) not in taken]
         mask = np.zeros(self.b, bool)
         for slot, req in zip(free, chosen):
             self._slot_req[slot] = req
-            self._slot_len[slot] = np.asarray(req.events).shape[0]
-            self._slot_done[slot] = 0
-            self._slot_seed[slot] = self._request_seed(req)
-            mask[slot] = True
-        self._state = snn_lib.silicon_stream_admit(
-            self._state, mask, self._slot_len, self._slot_seed)
+            self._slot_admit_round[slot] = self._rounds_total
+            req.state = lifecycle.RUNNING
+            if req._ckpt is not None:
+                # re-admission: update the host shadows *first*, then push
+                # the checkpoint into the slot.  Order matters — the
+                # masked admit below rewrites the full length/seed vectors
+                # from these shadows, so they must already carry the
+                # restored values when fresh admits share this pass.
+                ck = req._ckpt
+                self._slot_len[slot] = ck.length
+                self._slot_done[slot] = ck.steps_done
+                self._slot_seed[slot] = ck.seed
+                self._state = snn_lib.silicon_stream_restore(
+                    self._state, slot, ck)
+                req._ckpt = None
+            else:
+                self._slot_len[slot] = np.asarray(req.events).shape[0]
+                self._slot_done[slot] = 0
+                self._slot_seed[slot] = self._request_seed(req)
+                mask[slot] = True
+        if mask.any():
+            self._state = snn_lib.silicon_stream_admit(
+                self._state, mask, self._slot_len, self._slot_seed)
 
-    def _round(self) -> None:
-        r = self.round_steps
+    # --- preemption ---------------------------------------------------
+
+    def _preempt_slot(self, slot: int, backoff: bool = True) -> EventRequest:
+        """Checkpoint slot ``slot`` to host memory and requeue its request."""
+        req = self._slot_req[slot]
+        req._ckpt = snn_lib.silicon_stream_save(self._state, slot)
+        req.state = lifecycle.PREEMPTED
+        req.preemptions += 1
+        self.preemption_count += 1
+        if backoff:
+            req._not_before = (self._rounds_total + self.backoff_rounds *
+                               2 ** (req.preemptions - 1))
+        self._slot_req[slot] = None
+        self.pending.append(req)
+        return req
+
+    def _maybe_preempt(self) -> None:
+        """One scheduling decision: preempt at most one slot per tick.
+
+        Fires only when the batch is full, the best eligible queued
+        request outranks the weakest resident one (strictly higher
+        priority, or deadline-at-risk at >= priority), and the victim has
+        been resident at least ``preempt_quantum`` ticks with fewer than
+        ``max_preemptions`` prior preemptions.  The one-per-tick cap plus
+        quantum plus exponential backoff is the anti-thrash budget.
+        """
+        if not (self.preemptive and self.continuous and self.pending):
+            return
+        if any(r is None for r in self._slot_req):
+            return                      # a free slot: admission handles it
+        eligible = [r for r in self.pending
+                    if r._not_before <= self._rounds_total]
+        if not eligible:
+            return
+        now = time.perf_counter()
+        cand = min(eligible, key=lambda r: (-r.priority,
+                                            self._slack_ms(r, now),
+                                            r._order))
+        victims = [(i, r) for i, r in enumerate(self._slot_req)
+                   if self._rounds_total - self._slot_admit_round[i]
+                   >= self.preempt_quantum
+                   and r.preemptions < self.max_preemptions]
+        if not victims:
+            return
+        # weakest resident: lowest priority, then longest resident
+        slot, victim = min(victims,
+                           key=lambda iv: (iv[1].priority,
+                                           self._slot_admit_round[iv[0]],
+                                           iv[1]._order))
+        margin = (2.0 * self._round_ms if self.risk_margin_ms is None
+                  else self.risk_margin_ms)
+        at_risk = self._slack_ms(cand, now) < margin
+        if cand.priority > victim.priority or \
+                (at_risk and cand.priority >= victim.priority):
+            self._preempt_slot(slot)
+
+    def preempt_request(self, uid: int, at_step: int | None = None,
+                        backoff: bool = True) -> EventRequest:
+        """Force-preempt a resident request (fault-injection / test hook).
+
+        With ``at_step`` the stream is first advanced to exactly that
+        absolute offset — including offsets that are *not* multiples of
+        ``round_steps`` — by running partial rounds (the whole batch
+        advances together, so every co-resident slot stays bitwise-exact;
+        see ``forward_silicon_stream``).  The slot is then checkpointed to
+        host memory and the request requeued (``PREEMPTED``).  Call it
+        from a ``run(round_hook=...)`` callback to inject preemptions at
+        randomized offsets mid-serve.
+        """
+        if not self.continuous:
+            raise RuntimeError("preemption requires the continuous path")
+        slot = next((i for i, r in enumerate(self._slot_req)
+                     if r is not None and r.uid == uid), None)
+        if slot is None:
+            raise KeyError(f"request {uid} is not resident in any slot")
+        if at_step is not None:
+            done, length = int(self._slot_done[slot]), \
+                int(self._slot_len[slot])
+            if not done <= at_step < length:
+                raise ValueError(
+                    f"at_step={at_step} outside [{done}, {length}) for "
+                    f"request {uid}")
+            while int(self._slot_done[slot]) < at_step:
+                self._round(min(self.round_steps,
+                                at_step - int(self._slot_done[slot])))
+        return self._preempt_slot(slot, backoff=backoff)
+
+    def _round(self, r: int | None = None) -> None:
+        """Advance every occupied slot by ``r`` time steps (one launch).
+
+        ``r`` defaults to the regular ``round_steps`` cadence; smaller
+        values are the *partial rounds* the preemption path uses to stop a
+        stream at a non-round-aligned offset (each distinct ``r`` compiles
+        one jit entry, bounded by ``round_steps``).
+        """
+        r = self.round_steps if r is None else r
         ev = np.zeros((r, self.b, self.cfg.n_in), np.float32)
         for i, req in enumerate(self._slot_req):
             if req is None:
@@ -312,6 +577,9 @@ class SNNEventEngine:
             if req._t_submit is not None:
                 req.latency_ms = (time.perf_counter() -
                                   req._t_submit) * 1e3
+            req.state = lifecycle.COMPLETED
+            if req.deadline_ms is not None and req.latency_ms is not None:
+                req.deadline_missed = req.latency_ms > req.deadline_ms
             self._slot_req[i] = None
             self.completed.append(req)
             out.append(req)
@@ -322,23 +590,32 @@ class SNNEventEngine:
         """Occupied slot count (continuous path)."""
         return sum(r is not None for r in self._slot_req)
 
-    def run(self, max_rounds: int | None = None) -> list[EventRequest]:
+    def run(self, max_rounds: int | None = None,
+            round_hook: Callable[["SNNEventEngine"], None] | None = None
+            ) -> list[EventRequest]:
         """Serve the queue; returns the requests completed by *this* call,
         in submission order.
 
         Continuous path (default): rounds of ``round_steps`` time steps
         over the persistent slot batch — new requests are admitted into
         free slots *between rounds* (density-aware when
-        ``pack_by_density``), finished requests are evicted as soon as
-        their own stream ends, and the per-slot LIF membrane carries
-        across rounds on device.  ``max_rounds`` bounds this call (leaving
-        unfinished requests resident for the next ``run()``).
+        ``pack_by_density``, urgency-ordered when any queued request
+        carries a priority/deadline), finished requests are evicted as
+        soon as their own stream ends, and the per-slot LIF membrane
+        carries across rounds on device.  Each tick also expires
+        dead-on-arrival queued requests and makes at most one preemption
+        decision (see ``_maybe_preempt``).  ``max_rounds`` bounds this
+        call (leaving unfinished requests resident for the next
+        ``run()``).  ``round_hook(engine)``, if given, fires after every
+        tick's eviction — the chaos harness uses it to inject forced
+        preemptions at arbitrary step offsets mid-serve.
 
         Legacy path (``continuous=False``): drains in fixed whole-sequence
         batches, bucketed by stream length.
 
         Either way the returned list covers only requests drained by this
-        call — history accumulates in ``self.completed`` — and density
+        call — history accumulates in ``self.completed`` (and
+        ``self.expired`` / ``self.rejected`` for the shed paths) — and
         scheduling never leaks into result order (always submission
         order) or result values (noise is per-request on the continuous
         path; the legacy key stream is per-batch as before).
@@ -350,9 +627,28 @@ class SNNEventEngine:
         while self.pending or self.active:
             if max_rounds is not None and rounds >= max_rounds:
                 break
+            self._expire_pending()
+            if not (self.pending or self.active):
+                break
+            self._maybe_preempt()
             self._admit()
-            self._round()
+            ran = self.active > 0
+            t0 = time.perf_counter()
+            if ran:
+                self._round()
             drained.extend(self._evict())
+            if ran:
+                # EMA over ticks that launched a kernel (idle ticks are
+                # microseconds and would poison the slack estimates)
+                dt = (time.perf_counter() - t0) * 1e3
+                self._round_ms = (dt if self._round_ms == 0.0
+                                  else 0.9 * self._round_ms + 0.1 * dt)
+            if round_hook is not None:
+                round_hook(self)
+                drained.extend(self._evict())
+            # tick advances even when idle: backoff windows are measured
+            # in ticks and must expire with zero active slots too
+            self._rounds_total += 1
             rounds += 1
         drained.sort(key=lambda r: r._order if r._order is not None
                      else r.uid)
@@ -423,6 +719,12 @@ class SNNEventEngine:
             rep["latency_ms_p50"] = lat[len(lat) // 2]
             rep["latency_ms_p95"] = lat[min(len(lat) - 1,
                                             int(len(lat) * 0.95))]
+        # serving SLO ledger: every submission's fate is visible here
+        rep["preemptions"] = self.preemption_count
+        rep["rejected"] = len(self.rejected)
+        rep["expired"] = len(self.expired)
+        rep["deadline_misses"] = sum(
+            1 for r in self.completed if r.deadline_missed)
         return rep
 
 

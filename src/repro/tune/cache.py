@@ -62,6 +62,7 @@ from __future__ import annotations
 
 import json
 import os
+import tempfile
 import warnings
 from typing import NamedTuple
 
@@ -283,6 +284,14 @@ def save_entries(entries: list[dict], path: str | None = None,
     the file fresh (drops every previously persisted plan).  Returns the
     path written.  The in-process memo is invalidated so the next
     ``lookup`` sees the new contents.
+
+    The write is **atomic**: the document is serialized to a temp file in
+    the same directory, fsynced, and ``os.replace``d over the target.  A
+    crash (or a concurrent reader) mid-write can therefore never leave a
+    truncated/corrupt cache on disk — readers see either the old complete
+    file or the new complete file.  (A corrupt cache would only cost the
+    heuristic fallback, but a half-written file on every ``make tune``
+    interrupt is still a self-inflicted wound worth designing out.)
     """
     path = path or default_path()
     for e in entries:
@@ -301,8 +310,23 @@ def save_entries(entries: list[dict], path: str | None = None,
         merged[_entry_key(e)] = e
     doc = {"format": CACHE_FORMAT, "version": CACHE_VERSION,
            "entries": [merged[k] for k in sorted(merged)]}
-    with open(path, "w") as f:
-        json.dump(doc, f, indent=1)
-        f.write("\n")
+    # same-directory temp file: os.replace must not cross filesystems
+    fd, tmp = tempfile.mkstemp(
+        prefix=os.path.basename(path) + ".", suffix=".tmp",
+        dir=os.path.dirname(os.path.abspath(path)) or ".")
+    try:
+        with os.fdopen(fd, "w") as f:
+            json.dump(doc, f, indent=1)
+            f.write("\n")
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+    except BaseException:
+        # never leave a stray temp file next to the cache
+        try:
+            os.unlink(tmp)
+        except OSError:
+            pass
+        raise
     _MEMO.pop(path, None)
     return path

@@ -23,6 +23,7 @@ tests pay interpret-mode launches and stay in the default tier).
 from __future__ import annotations
 
 import json
+import os
 import warnings
 
 import jax
@@ -163,6 +164,35 @@ class TestCacheRoundTrip:
             cache.save_entries([{"op": "fused_macro_seq"}])
         with pytest.raises(ValueError):           # bk not lane-aligned
             cache.save_entries([_entry((8, 100, 128))])
+
+    def test_save_is_atomic_interrupted_write_keeps_old_file(
+            self, cache_path):
+        """A crash mid-serialization leaves the previous complete file.
+
+        The write goes to a same-directory temp file that is os.replace'd
+        over the target only once fully flushed — so a failure inside
+        json.dump can neither truncate the cache nor leak a *.tmp next
+        to it.
+        """
+        cache.save_entries([_entry((8, 128, 128))])
+        before = open(cache_path).read()
+
+        def boom(*a, **kw):
+            raise OSError("disk full")
+        orig_dump = cache.json.dump
+        cache.json.dump = boom     # patch by hand: monkeypatch.undo() would
+        try:                       # also roll back the fixture's ENV_PATH
+            with pytest.raises(OSError):
+                cache.save_entries([_entry((8, 256, 128))], merge=False)
+        finally:
+            cache.json.dump = orig_dump
+        assert open(cache_path).read() == before      # old file intact
+        leftovers = [f for f in os.listdir(os.path.dirname(cache_path))
+                     if f.endswith(".tmp")]
+        assert leftovers == []                        # no temp droppings
+        cache.clear_memo()
+        assert cache.lookup(8, 256, 128, 128, 3,
+                            mode="kwn") == cache.PlanBlocks(8, 128, 128)
 
 
 # ---------------------------------------------------------------------------

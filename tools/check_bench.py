@@ -11,8 +11,11 @@ Two checks, stdlib only (runs in the minimal container and in CI):
    rows the silicon-training subsystem added) must each appear at least
    once, so a refactor cannot silently drop a tracked hot path from the
    artifact.  Ops in ``MIN_SPEEDUP_OPS`` additionally carry a speedup
-   floor — ``tuned_vs_heuristic`` must report >= 1.0, the autotuner's
-   structural invariant.
+   floor — ``tuned_vs_heuristic`` must report >= 1.0 (the autotuner's
+   structural invariant) and ``serve_preempt_on`` must report >= 1.0
+   (the scheduler fairness floor: shorts' p95 latency with preemption
+   must not be worse than FIFO on the hog trace, same-run ratio so
+   machine speed cancels).
 
 2. **Regression gate** (``--baseline PATH``): every *tracked clean-path*
    record (``mode == "kwn"`` with a baseline median of at least
@@ -59,12 +62,20 @@ REQUIRED_OPS = {"composed_step", "fused_step", "fused_seq_time_major",
                 "train_step_bptt", "train_step_silicon_vjp",
                 "serve_stream_drain", "serve_stream_continuous",
                 "serve_stream_noisy",
+                "serve_preempt_off", "serve_preempt_on",
                 "fused_seq_heuristic_plan", "tuned_vs_heuristic"}
-# The autotuner's structural invariant (the heuristic is always in the
-# candidate set, and the bench re-measures both plans in the same run and
-# reports the better one as tuned): a tuned_vs_heuristic row below 1.0
-# means the plan-resolution path regressed, not that a machine got noisy.
-MIN_SPEEDUP_OPS = {"tuned_vs_heuristic": 1.0}
+# Structural invariants, not perf taste:
+# - tuned_vs_heuristic: the heuristic is always in the autotuner's
+#   candidate set and the bench re-measures both plans in the same run,
+#   reporting the better one as tuned — a row below 1.0 means the
+#   plan-resolution path regressed, not that a machine got noisy.
+# - serve_preempt_on: the fairness floor.  median_ms on the serve_preempt
+#   rows is the shorts' p95 latency on the hog+shorts trace, and speedup
+#   is p95_fifo / p95_preemptive measured in the *same* bench run — so
+#   machine speed cancels out, and a value below 1.0 means enabling
+#   preemption made the latency-sensitive traffic *worse*: the scheduler
+#   itself regressed (the trace's structural gap is ~2x in its favor).
+MIN_SPEEDUP_OPS = {"tuned_vs_heuristic": 1.0, "serve_preempt_on": 1.0}
 NORMALIZER = ("composed_step", "128x256x128", "kwn")
 TRACKED_MODE = "kwn"   # clean path only: noise overhead is measured, not gated
 MIN_TRACKED_MS = 5.0   # below this, interpret-mode medians are pure jitter
