@@ -14,8 +14,8 @@ PYTHONPATH_SRC := PYTHONPATH=src$(if $(PYTHONPATH),:$(PYTHONPATH))
 PYTEST := $(PYTHONPATH_SRC) python -m pytest
 LINT_PATHS := src tests benchmarks examples tools
 
-.PHONY: smoke train-smoke serve-smoke chaos-smoke test lint bench \
-	bench-check tune tune-smoke
+.PHONY: smoke train-smoke serve-smoke chaos-smoke obs-smoke test lint \
+	bench bench-check tune tune-smoke
 
 # `smoke`, `train-smoke`, and `serve-smoke` partition the fast tier
 # (silicon-training tests are owned by `train-smoke`, serving-engine and
@@ -45,6 +45,16 @@ serve-smoke:
 # deadline storms) with hard invariant assertions; nonzero on violation.
 chaos-smoke:
 	$(PYTHONPATH_SRC) python tools/chaos_serve.py --smoke
+
+# Observability gate: a traced 6-request engine run must export a
+# Perfetto-loadable timeline (slot residency + scheduler phases +
+# checkpoint transfers) whose metric counters equal the engine ledgers;
+# the exported file is then re-validated by the standalone checker.
+obs-smoke:
+	$(PYTHONPATH_SRC) python tools/obs_report.py --smoke \
+		--trace-out /tmp/obs_smoke_trace.json \
+		--metrics-out /tmp/obs_smoke_metrics.json
+	python tools/obs_report.py --check /tmp/obs_smoke_trace.json
 
 test:
 	$(PYTEST) -x -q

@@ -586,6 +586,16 @@ def _serve_variants():
         "latency_ms_p50": round(rep["latency_ms_p50"], 2),
         "latency_ms_p95": round(rep["latency_ms_p95"], 2),
         "pj_per_sop_measured": round(rep["pj_per_sop"], 3),
+        # observability block (informative, schema-checked but never
+        # perf-gated — interpret-mode round times are too noisy to gate):
+        # kernel-round wall-time quantiles and the measured activity-plan
+        # skip rate, from the profile trial's engine
+        "obs": {
+            "round_ms_p50": round(rep["round_ms_p50"], 3),
+            "round_ms_p95": round(rep["round_ms_p95"], 3),
+            "skipped_block_ratio": round(
+                rep.get("mean_skipped_block_ratio", 0.0), 4),
+        },
     }
 
 
@@ -901,10 +911,13 @@ def records(report: dict) -> list[dict]:
         {"op": "serve_stream_drain", "shape": srv_shape, "mode": "kwn",
          "median_ms": srv["ms_drain"], "speedup": 1.0,
          "density": srv["mean_density"]},
+        # the continuous row carries the optional "obs" block —
+        # round-time quantiles + measured skip rate from the profile
+        # trial (check_bench validates its schema but never gates on it)
         {"op": "serve_stream_continuous", "shape": srv_shape, "mode": "kwn",
          "median_ms": srv["ms_continuous"],
          "speedup": srv["throughput_vs_drain"],
-         "density": srv["mean_density"]},
+         "density": srv["mean_density"], "obs": srv["obs"]},
         {"op": "serve_stream_noisy", "shape": srv_shape, "mode": "kwn+noise",
          "median_ms": srv["ms_continuous_noisy"],
          "speedup": round(1.0 / srv["noise_overhead"], 2),
@@ -952,7 +965,16 @@ def main(argv=None):
     ap.add_argument("--out", default=None,
                     help="write fixed-schema trajectory records to this "
                          "JSON file (e.g. BENCH_fused_macro.json)")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Perfetto trace of the whole bench run "
+                         "(every measurement + serving round becomes a "
+                         "span; slightly perturbs the timings, so CI "
+                         "baselines are recorded without it)")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        from repro.obs import trace as obs_trace
+        obs_trace.set_tracer(obs_trace.Tracer(enabled=True,
+                                              capacity=1 << 18))
     report = run()
     print(json.dumps(report, indent=1))
     if args.out:
@@ -960,6 +982,10 @@ def main(argv=None):
             json.dump({"bench": "fused_macro", "records": records(report)},
                       f, indent=1)
         print(f"\nwrote {args.out}")
+    if args.trace_out:
+        from repro.obs import trace as obs_trace
+        n = obs_trace.get_tracer().export(args.trace_out)
+        print(f"wrote {n} spans to {args.trace_out}")
 
 
 if __name__ == "__main__":

@@ -26,6 +26,7 @@ from repro.core import lif as lif_lib
 from repro.core import macro as macro_lib
 from repro.core import prbs as prbs_lib
 from repro.core import ternary as ternary_lib
+from repro.obs import trace as obs_trace
 
 
 @dataclasses.dataclass(frozen=True)
@@ -654,8 +655,15 @@ def silicon_stream_save(state: SiliconStreamState,
     The slot's rows are copied out as-is; the device state is left
     untouched (the engine re-admits over the stale rows, which
     ``silicon_stream_admit`` / ``silicon_stream_restore`` fully reset).
+
+    The pull is wrapped in a ``checkpoint_save`` span on the
+    ``transfer`` track (with the payload byte count) — host<->device
+    checkpoint traffic is the ROADMAP's named TPU bottleneck candidate,
+    so it gets a first-class lane in every exported trace.
     """
-    return SlotCheckpoint(
+    tr = obs_trace.get_tracer()
+    span = tr.begin("checkpoint_save", track="transfer")
+    ckpt = SlotCheckpoint(
         v=np.asarray(state.v[slot]),
         prbs=int(np.asarray(state.prbs[slot])),
         counts=np.asarray(state.counts[slot]),
@@ -665,6 +673,23 @@ def silicon_stream_save(state: SiliconStreamState,
         steps_done=int(np.asarray(state.steps_done[slot])),
         length=int(np.asarray(state.length[slot])),
         seed=int(np.asarray(state.seed[slot])))
+    if span is not None:
+        tr.end(span, args={"slot": int(slot),
+                           "bytes": checkpoint_nbytes(ckpt),
+                           "direction": "device_to_host"})
+    return ckpt
+
+
+def checkpoint_nbytes(ckpt: SlotCheckpoint) -> int:
+    """Payload size of one slot checkpoint in bytes (arrays + scalars).
+
+    Scalars travel as one machine word each; this is the quantity the
+    transfer spans report and the engine's bandwidth math would use on a
+    real part, so it lives next to the checkpoint type rather than being
+    re-derived in tooling.
+    """
+    scalar_bytes = 8 * (len(ckpt) - 2)   # all fields except the two arrays
+    return int(ckpt.v.nbytes + ckpt.counts.nbytes + scalar_bytes)
 
 
 @jax.jit
@@ -696,13 +721,26 @@ def silicon_stream_restore(state: SiliconStreamState, slot: int,
     results are bitwise-identical to never having been preempted
     (pinned by tests/test_serve_preempt.py across slots, co-residents,
     and non-round-aligned offsets).
+
+    Wrapped in a ``checkpoint_restore`` span on the ``transfer`` track,
+    mirroring ``silicon_stream_save`` — note the span covers the
+    host->device *dispatch* (the scatter is jitted and asynchronous), so
+    on real hardware the device-side cost shows up in the XLA trace the
+    optional ``jax.profiler`` passthrough lines spans up with.
     """
-    return _stream_restore(
+    tr = obs_trace.get_tracer()
+    span = tr.begin("checkpoint_restore", track="transfer")
+    state = _stream_restore(
         state, jnp.int32(slot), jnp.asarray(ckpt.v, jnp.float32),
         jnp.uint32(ckpt.prbs), jnp.asarray(ckpt.counts, jnp.float32),
         jnp.float32(ckpt.adc), jnp.float32(ckpt.sops),
         jnp.float32(ckpt.skip_acc), jnp.int32(ckpt.steps_done),
         jnp.int32(ckpt.length), jnp.int32(ckpt.seed))
+    if span is not None:
+        tr.end(span, args={"slot": int(slot),
+                           "bytes": checkpoint_nbytes(ckpt),
+                           "direction": "host_to_device"})
+    return state
 
 
 @functools.partial(jax.jit, static_argnames=("cfg", "noise"))

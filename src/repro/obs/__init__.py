@@ -1,0 +1,28 @@
+"""Observability layer: span tracing + process-local metrics.
+
+``repro.obs`` sits *below* ``serve/`` in the layer map and imports
+nothing above ``core/`` — in fact both modules here are stdlib-only at
+import time (``trace.py`` touches ``jax.profiler`` lazily, and only
+when TraceAnnotation passthrough is explicitly requested), so the
+package is importable in the minimal container without JAX.
+
+- :mod:`repro.obs.trace` — lightweight span tracer (context-manager +
+  explicit begin/end API, monotonic clocks, thread-safe ring buffer,
+  zero-cost when disabled) with a Chrome/Perfetto ``trace_event`` JSON
+  exporter.
+- :mod:`repro.obs.metrics` — counters / gauges / fixed-bucket
+  histograms with labeled series, exported as JSON or Prometheus text.
+"""
+
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import Tracer, get_tracer, set_tracer
+
+__all__ = [
+    "Counter",
+    "Gauge",
+    "Histogram",
+    "MetricsRegistry",
+    "Tracer",
+    "get_tracer",
+    "set_tracer",
+]

@@ -13,6 +13,7 @@ import dataclasses
 import functools
 import math
 import time
+from collections import deque
 from typing import Any, Callable
 
 import jax
@@ -22,7 +23,30 @@ import numpy as np
 from repro.core import energy as energy_lib
 from repro.models import lm
 from repro.models import snn as snn_lib
+from repro.obs import metrics as obs_metrics
+from repro.obs import trace as obs_trace
 from repro.serve import lifecycle
+
+# Round-time estimation (see _round_ms_estimate).  The EMA keeps a
+# cheap running estimate for the first few rounds; once at least
+# ROUND_MS_P95_MIN_SAMPLES kernel rounds have been timed, deadline-risk
+# slack switches to the exact p95 of the recent-sample window — an EMA
+# tracks the *center* of a jittery distribution, while admission slack
+# needs the *tail* (an optimistic estimate admits requests that then
+# blow their deadline; ROADMAP flagged the EMA as near-meaningless in
+# interpret mode for exactly this reason).
+ROUND_MS_EMA_DECAY = 0.9          # weight on history per EMA update
+ROUND_MS_P95_MIN_SAMPLES = 8      # exact-p95 takes over at this depth
+ROUND_MS_SAMPLE_WINDOW = 512      # recent rounds kept for exact quantiles
+
+# Fixed bucket edges for the per-request metric histograms.  ADC sweep
+# depth is bounded by the ramp (2**code_bits - 1 = 15 for the paper's
+# 4-bit code); ratios live in [0, 1]; modeled pJ/SOP lands near the
+# paper's 0.8 headline.
+ADC_STEP_BUCKETS = (1.0, 2.0, 3.0, 4.0, 5.0, 6.0, 8.0, 10.0, 12.0,
+                    14.0, 15.0)
+RATIO_BUCKETS = (0.05, 0.1, 0.2, 0.3, 0.4, 0.5, 0.6, 0.7, 0.8, 0.9, 1.0)
+PJ_PER_SOP_BUCKETS = (0.25, 0.5, 0.75, 1.0, 1.25, 1.5, 2.0, 3.0, 5.0)
 
 
 def build_serve_step(cfg: lm.LMConfig, mesh=None, *, temperature: float = 0.0):
@@ -80,6 +104,7 @@ class EventRequest:
     deadline_ms: float | None = None  # SLO deadline, wall ms from submit
     state: str = lifecycle.QUEUED    # lifecycle state (see serve.lifecycle)
     preemptions: int = 0             # times this request was checkpointed out
+    preempted_ms: float = 0.0        # total wall ms spent checkpointed out
     deadline_missed: bool | None = None  # completed after its deadline?
     _order: int | None = dataclasses.field(default=None, repr=False,
                                            compare=False)  # submission index
@@ -87,6 +112,9 @@ class EventRequest:
                                                 compare=False)
     _ckpt: Any = dataclasses.field(default=None, repr=False, compare=False)
     _not_before: int = dataclasses.field(default=0, repr=False, compare=False)
+    _t_preempt_out: float | None = dataclasses.field(default=None, repr=False,
+                                                     compare=False)
+    _span: Any = dataclasses.field(default=None, repr=False, compare=False)
 
 
 @functools.lru_cache(maxsize=None)
@@ -180,7 +208,7 @@ class SNNEventEngine:
                  max_pending: int | None = None, preemptive: bool = True,
                  preempt_quantum: int = 1, max_preemptions: int = 3,
                  backoff_rounds: int = 1, risk_margin_ms: float | None = None,
-                 validate: bool = True):
+                 validate: bool = True, tracer=None, metrics=None):
         self.cfg = cfg
         self.params = params
         self.b = batch_slots
@@ -218,6 +246,36 @@ class SNNEventEngine:
         self.preemption_count = 0        # total preemptions (policy + forced)
         self._rounds_total = 0           # monotonic scheduling-tick counter
         self._round_ms = 0.0             # EMA wall ms per round (estimates)
+        self._round_samples: deque[float] = deque(
+            maxlen=ROUND_MS_SAMPLE_WINDOW)
+        # observability: spans go to the engine tracer (falls back to the
+        # process-global, which starts disabled — the zero-cost default);
+        # metrics are always recorded into a per-engine registry so the
+        # chaos harness can cross-check counters against *this* engine's
+        # ledgers without bleed from other engines in the process.
+        self._tracer = tracer
+        self.metrics = metrics if metrics is not None \
+            else obs_metrics.MetricsRegistry()
+        m = self.metrics
+        self._m_rounds = m.counter("rounds_total")
+        self._m_round_ms = m.histogram("round_ms")
+        self._m_admitted = m.counter("admitted_total")
+        self._m_evicted = m.counter("evicted_total")
+        self._m_preempted = m.counter("preempted_total")
+        self._m_shed = m.counter("shed_total")
+        self._m_expired = m.counter("expired_total")
+        self._m_queue = m.gauge("queue_depth")
+        self._m_occupancy = m.gauge("slot_occupancy")
+        self._m_terminal = {
+            s: m.counter("terminal_total", state=s)
+            for s in sorted(lifecycle.TERMINAL_STATES)}
+        self._m_latency = m.histogram("request_latency_ms")
+        self._m_adc = m.histogram("request_adc_steps",
+                                  buckets=ADC_STEP_BUCKETS)
+        self._m_skip = m.histogram("request_skipped_block_ratio",
+                                   buckets=RATIO_BUCKETS)
+        self._m_pj = m.histogram("request_pj_per_sop",
+                                 buckets=PJ_PER_SOP_BUCKETS)
         # continuous-path slot table (host shadows of the device state)
         self._state = (snn_lib.silicon_stream_init(cfg, batch_slots)
                        if continuous else None)
@@ -226,6 +284,44 @@ class SNNEventEngine:
         self._slot_done = np.zeros(batch_slots, np.int32)
         self._slot_seed = np.zeros(batch_slots, np.int32)
         self._slot_admit_round = np.zeros(batch_slots, np.int64)
+
+    @property
+    def tracer(self) -> obs_trace.Tracer:
+        """Engine tracer: the one passed at construction, else the
+        process-global (resolved per access so ``set_tracer`` after
+        engine construction still takes effect)."""
+        t = self._tracer
+        return t if t is not None else obs_trace.get_tracer()
+
+    def _record_terminal(self, req: EventRequest) -> None:
+        """Exactly-one-increment bookkeeping for a terminal transition.
+
+        Every code path that appends to a terminal ledger (completed /
+        rejected / expired) calls this exactly once, so
+        ``terminal_total{state=...}`` always equals the ledger lengths —
+        the invariant tests/test_obs.py and the chaos harness assert.
+        """
+        self._m_terminal[req.state].inc()
+
+    def _observe_completed(self, req: EventRequest) -> None:
+        """Feed the per-request telemetry histograms at completion."""
+        if req.latency_ms is not None:
+            self._m_latency.observe(req.latency_ms)
+        if req.adc_steps is not None:
+            self._m_adc.observe(req.adc_steps)
+        if req.skipped_block_ratio is not None:
+            self._m_skip.observe(req.skipped_block_ratio)
+        if req.adc_steps is not None and self.cfg.mode == "kwn" \
+                and req.density:
+            # modeled pJ/SOP for *this* request: the calibrated component
+            # model evaluated at the request's measured early-stop depth,
+            # with its measured event density standing in for the
+            # dataset spike rate (the engine does not know the dataset;
+            # energy_report recomputes with the calibrated rate)
+            bd = energy_lib.kwn_step_energy(self.cfg.k, req.density,
+                                            adc_steps=req.adc_steps)
+            self._m_pj.observe(
+                bd.total / energy_lib.sops_per_step(req.density))
 
     def submit(self, req: EventRequest) -> EventRequest:
         """Enqueue a request; returns it with ``state`` set.
@@ -259,10 +355,18 @@ class SNNEventEngine:
                          key=lambda r: (r.priority, -r._order))
             victim.state = lifecycle.REJECTED
             self.rejected.append(victim)
+            self._m_shed.inc()
+            self._record_terminal(victim)
+            tr = self.tracer
+            if tr.enabled:
+                tr.instant(f"shed req{victim.uid}", track="scheduler",
+                           args={"uid": victim.uid,
+                                 "priority": victim.priority})
             if victim is req:
                 return req
             self.pending.remove(victim)
         self.pending.append(req)
+        self._m_queue.set(len(self.pending))
         return req
 
     # ------------------------------------------------------------------
@@ -270,6 +374,8 @@ class SNNEventEngine:
     # ------------------------------------------------------------------
 
     def _run_batch(self, reqs: list[EventRequest]) -> list[EventRequest]:
+        tr = self.tracer
+        batch_span = tr.begin("legacy_batch", track="scheduler")
         ev = jnp.stack([jnp.asarray(r.events, jnp.float32) for r in reqs])
         pad = self.b - ev.shape[0]
         if pad:
@@ -294,6 +400,10 @@ class SNNEventEngine:
             if req.deadline_ms is not None and req.latency_ms is not None:
                 req.deadline_missed = req.latency_ms > req.deadline_ms
             self.completed.append(req)
+            self._record_terminal(req)
+            self._observe_completed(req)
+        tr.end(batch_span,
+               args={"batch": len(reqs)} if batch_span is not None else None)
         return reqs
 
     def _take_bucket(self) -> list[EventRequest]:
@@ -357,22 +467,45 @@ class SNNEventEngine:
             return
         now = time.perf_counter()
         keep: list[EventRequest] = []
+        tr = self.tracer
         for r in self.pending:
             if r.deadline_ms is not None and r._t_submit is not None and \
                     (now - r._t_submit) * 1e3 > r.deadline_ms:
                 r.state = lifecycle.EXPIRED
                 self.expired.append(r)
+                self._m_expired.inc()
+                self._record_terminal(r)
+                if tr.enabled:
+                    tr.instant(f"expire req{r.uid}", track="scheduler",
+                               args={"uid": r.uid,
+                                     "deadline_ms": r.deadline_ms})
             else:
                 keep.append(r)
         self.pending = keep
 
+    def _round_ms_estimate(self) -> float:
+        """Round-time estimate feeding the deadline-risk slack math.
+
+        Exact p95 of the recent-round sample window once at least
+        ``ROUND_MS_P95_MIN_SAMPLES`` kernel rounds have been timed — the
+        pessimistic tail is what slack estimation needs — falling back
+        to the EMA while the window is still warming up.
+        """
+        n = len(self._round_samples)
+        if n >= ROUND_MS_P95_MIN_SAMPLES:
+            s = sorted(self._round_samples)
+            return s[min(n - 1, int(n * 0.95))]
+        return self._round_ms
+
     def _slack_ms(self, req: EventRequest, now: float) -> float:
         """Estimated deadline slack in wall ms (+inf if no deadline).
 
-        slack = deadline - elapsed - (remaining rounds x EMA round time).
-        A checkpointed request's remaining work starts at its recorded
-        step offset, so a mostly-done preempted request reads as *less*
-        at-risk than a fresh one with the same deadline.
+        slack = deadline - elapsed - (remaining rounds x estimated round
+        time; p95 of recent rounds once warm, EMA before that — see
+        ``_round_ms_estimate``).  A checkpointed request's remaining
+        work starts at its recorded step offset, so a mostly-done
+        preempted request reads as *less* at-risk than a fresh one with
+        the same deadline.
         """
         if req.deadline_ms is None or req._t_submit is None:
             return math.inf
@@ -381,7 +514,8 @@ class SNNEventEngine:
             t, done = req._ckpt.length, req._ckpt.steps_done
         else:
             t, done = np.asarray(req.events).shape[0], 0
-        est = math.ceil((t - done) / self.round_steps) * self._round_ms
+        est = math.ceil((t - done) / self.round_steps) \
+            * self._round_ms_estimate()
         return req.deadline_ms - elapsed - est
 
     # --- admission ----------------------------------------------------
@@ -421,11 +555,26 @@ class SNNEventEngine:
         taken = {id(r) for r in chosen}
         self.pending = [r for r in self.pending if id(r) not in taken]
         mask = np.zeros(self.b, bool)
+        tr = self.tracer
         for slot, req in zip(free, chosen):
             self._slot_req[slot] = req
             self._slot_admit_round[slot] = self._rounds_total
             req.state = lifecycle.RUNNING
+            self._m_admitted.inc()
+            if tr.enabled:
+                # residency span: one lane per slot, open until the
+                # request leaves the slot (evict or preempt)
+                req._span = tr.begin(
+                    f"req{req.uid}", track=f"slot{slot:02d}",
+                    args={"uid": req.uid, "priority": req.priority,
+                          "resumed": req._ckpt is not None})
             if req._ckpt is not None:
+                if req._t_preempt_out is not None:
+                    # checkpoint dwell: wall time spent off-device since
+                    # the preemption that produced this checkpoint
+                    req.preempted_ms += (time.perf_counter() -
+                                         req._t_preempt_out) * 1e3
+                    req._t_preempt_out = None
                 # re-admission: update the host shadows *first*, then push
                 # the checkpoint into the slot.  Order matters — the
                 # masked admit below rewrites the full length/seed vectors
@@ -455,7 +604,14 @@ class SNNEventEngine:
         req._ckpt = snn_lib.silicon_stream_save(self._state, slot)
         req.state = lifecycle.PREEMPTED
         req.preemptions += 1
+        req._t_preempt_out = time.perf_counter()
         self.preemption_count += 1
+        self._m_preempted.inc()
+        if req._span is not None:
+            self.tracer.end(req._span, args={"outcome": "preempted",
+                                             "steps_done":
+                                                 int(self._slot_done[slot])})
+            req._span = None
         if backoff:
             req._not_before = (self._rounds_total + self.backoff_rounds *
                                2 ** (req.preemptions - 1))
@@ -496,8 +652,8 @@ class SNNEventEngine:
                            key=lambda iv: (iv[1].priority,
                                            self._slot_admit_round[iv[0]],
                                            iv[1]._order))
-        margin = (2.0 * self._round_ms if self.risk_margin_ms is None
-                  else self.risk_margin_ms)
+        margin = (2.0 * self._round_ms_estimate()
+                  if self.risk_margin_ms is None else self.risk_margin_ms)
         at_risk = self._slack_ms(cand, now) < margin
         if cand.priority > victim.priority or \
                 (at_risk and cand.priority >= victim.priority):
@@ -543,6 +699,7 @@ class SNNEventEngine:
         one jit entry, bounded by ``round_steps``).
         """
         r = self.round_steps if r is None else r
+        span = self.tracer.begin("round", track="scheduler")
         ev = np.zeros((r, self.b, self.cfg.n_in), np.float32)
         for i, req in enumerate(self._slot_req):
             if req is None:
@@ -555,6 +712,9 @@ class SNNEventEngine:
             self.params, jnp.asarray(ev), self.cfg, self._state,
             noise=self.noise)
         self._slot_done = np.minimum(self._slot_done + r, self._slot_len)
+        self._m_rounds.inc()
+        if span is not None:
+            self.tracer.end(span, args={"steps": r, "active": self.active})
 
     def _evict(self) -> list[EventRequest]:
         out: list[EventRequest] = []
@@ -582,6 +742,15 @@ class SNNEventEngine:
                 req.deadline_missed = req.latency_ms > req.deadline_ms
             self._slot_req[i] = None
             self.completed.append(req)
+            self._m_evicted.inc()
+            self._record_terminal(req)
+            self._observe_completed(req)
+            if req._span is not None:
+                self.tracer.end(req._span,
+                                args={"outcome": "completed",
+                                      "latency_ms": req.latency_ms,
+                                      "preemptions": req.preemptions})
+                req._span = None
             out.append(req)
         return out
 
@@ -623,26 +792,45 @@ class SNNEventEngine:
         if not self.continuous:
             return self._run_legacy()
         drained: list[EventRequest] = []
+        tr = self.tracer
         rounds = 0
         while self.pending or self.active:
             if max_rounds is not None and rounds >= max_rounds:
                 break
+            tick = tr.begin("tick", track="scheduler")
+            h = tr.begin("expire", track="scheduler")
             self._expire_pending()
+            tr.end(h)
             if not (self.pending or self.active):
+                tr.end(tick)
                 break
+            h = tr.begin("preempt", track="scheduler")
             self._maybe_preempt()
+            tr.end(h)
+            h = tr.begin("admit", track="scheduler")
             self._admit()
+            tr.end(h)
+            self._m_queue.set(len(self.pending))
+            self._m_occupancy.set(self.active)
             ran = self.active > 0
             t0 = time.perf_counter()
             if ran:
                 self._round()
+            h = tr.begin("evict", track="scheduler")
             drained.extend(self._evict())
+            tr.end(h)
             if ran:
-                # EMA over ticks that launched a kernel (idle ticks are
-                # microseconds and would poison the slack estimates)
+                # round-time estimators, fed only by ticks that launched
+                # a kernel (idle ticks are microseconds and would poison
+                # the slack estimates): EMA for warmup, an exact sample
+                # window for p50/p95, and the mergeable histogram export
                 dt = (time.perf_counter() - t0) * 1e3
-                self._round_ms = (dt if self._round_ms == 0.0
-                                  else 0.9 * self._round_ms + 0.1 * dt)
+                self._round_ms = (
+                    dt if self._round_ms == 0.0
+                    else ROUND_MS_EMA_DECAY * self._round_ms +
+                    (1.0 - ROUND_MS_EMA_DECAY) * dt)
+                self._round_samples.append(dt)
+                self._m_round_ms.observe(dt)
             if round_hook is not None:
                 round_hook(self)
                 drained.extend(self._evict())
@@ -650,6 +838,7 @@ class SNNEventEngine:
             # in ticks and must expire with zero active slots too
             self._rounds_total += 1
             rounds += 1
+            tr.end(tick)
         drained.sort(key=lambda r: r._order if r._order is not None
                      else r.uid)
         return drained
@@ -707,6 +896,10 @@ class SNNEventEngine:
         rep["per_request"] = [
             {"uid": r.uid,
              "latency_ms": r.latency_ms,
+             # checkpoint dwell: wall ms spent checkpointed off-device.
+             # latency_ms includes it, so fairness analysis can separate
+             # "ran slowly" from "sat preempted" per request.
+             "preempted_ms": r.preempted_ms,
              "adc_steps": r.adc_steps,
              "pj_per_sop": energy_lib.kwn_step_energy(
                  self.cfg.k, spike_rate,
@@ -719,6 +912,14 @@ class SNNEventEngine:
             rep["latency_ms_p50"] = lat[len(lat) // 2]
             rep["latency_ms_p95"] = lat[min(len(lat) - 1,
                                             int(len(lat) * 0.95))]
+        if self._round_samples:
+            # exact quantiles over the recent kernel-round window (the
+            # same samples that feed the round_ms histogram metric and
+            # the deadline-slack p95) — replaces squinting at the EMA
+            rs = sorted(self._round_samples)
+            rep["round_ms_p50"] = rs[len(rs) // 2]
+            rep["round_ms_p95"] = rs[min(len(rs) - 1,
+                                         int(len(rs) * 0.95))]
         # serving SLO ledger: every submission's fate is visible here
         rep["preemptions"] = self.preemption_count
         rep["rejected"] = len(self.rejected)

@@ -230,7 +230,10 @@ def measure_candidate(cell: TuneCell, blocks: tuple[int, int, int],
     args = (x, msb, lsb, cb.boundaries, cb.levels, scale, v)
     out = run(*args)                        # adc telemetry for the energy term
     adc_mean = float(jnp.mean(out[4]))
-    ms = measure.median_us(run, args, iters=iters) * 1e-3
+    ms = measure.median_us(
+        run, args, iters=iters,
+        label=f"candidate {blocks[0]}x{blocks[1]}x{blocks[2]} "
+              f"@ {cell.m}x{cell.k_dim}x{cell.n}") * 1e-3
     return Measurement(blocks, ms,
                        modeled_pj_per_sop(cell, blocks, x, adc_mean))
 

@@ -18,6 +18,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.obs import trace as obs_trace
+
 # Per-element event rate inside an active (burst) step of a DVS-like
 # stream.  Shared constant: the bench's density sweep and the tuner's
 # candidate measurements must synthesize the same temporal structure,
@@ -26,9 +28,20 @@ import numpy as np
 IN_BURST_DENSITY = 0.2
 
 
-def median_us(fn, args, iters: int = 20) -> float:
+def median_us(fn, args, iters: int = 20, label: str | None = None) -> float:
     """Median per-call wall time in microseconds (median over ``iters``
-    timed calls — robust to the scheduler hiccups a mean would absorb)."""
+    timed calls — robust to the scheduler hiccups a mean would absorb).
+
+    Each call emits one ``measure`` span on the ``measure`` track of the
+    process-global tracer (when enabled), covering warmup + all timed
+    iterations and carrying the resulting median — so a traced bench or
+    autotune run (``--trace-out``) renders every candidate measurement
+    as its own block on the timeline.  ``label`` names the span
+    (e.g. the autotuner's candidate tile plan); the measurement itself
+    is unchanged.
+    """
+    tr = obs_trace.get_tracer()
+    span = tr.begin(label or "measure", track="measure")
     out = fn(*args)                       # compile + warm up
     jax.block_until_ready(out)
     samples = []
@@ -37,12 +50,15 @@ def median_us(fn, args, iters: int = 20) -> float:
         out = fn(*args)
         jax.block_until_ready(out)
         samples.append(time.perf_counter() - t0)
-    return float(np.median(samples)) * 1e6
+    us = float(np.median(samples)) * 1e6
+    if span is not None:
+        tr.end(span, args={"iters": iters, "median_us": us})
+    return us
 
 
-def median_ms(fn, args, iters: int = 20) -> float:
+def median_ms(fn, args, iters: int = 20, label: str | None = None) -> float:
     """``median_us`` in milliseconds — the unit the plan cache persists."""
-    return median_us(fn, args, iters=iters) * 1e-3
+    return median_us(fn, args, iters=iters, label=label) * 1e-3
 
 
 def event_stream(key, density, shape):

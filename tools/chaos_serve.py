@@ -86,6 +86,31 @@ def _terminal_ledger(engine, submitted):
              len(engine.expired))
     assert total == len(submitted), \
         f"ledger holds {total} requests, submitted {len(submitted)}"
+    _metrics_match_ledgers(engine)
+
+
+def _metrics_match_ledgers(engine):
+    """The engine's metric counters must agree with its ledgers exactly.
+
+    Chaos runs double as the observability gate: every scenario already
+    drives terminal transitions hard, so if a code path ever bumps a
+    ledger without its counter (or vice versa) it fails here for free.
+    """
+    m = engine.metrics
+    for state, ledger in (("completed", engine.completed),
+                          ("rejected", engine.rejected),
+                          ("expired", engine.expired)):
+        got = m.value("terminal_total", state=state)
+        assert got == len(ledger), \
+            f"terminal_total{{state={state}}} = {got}, " \
+            f"ledger holds {len(ledger)}"
+    assert m.value("shed_total") == len(engine.rejected), \
+        f"shed_total {m.value('shed_total')} != {len(engine.rejected)}"
+    assert m.value("expired_total") == len(engine.expired), \
+        f"expired_total {m.value('expired_total')} != {len(engine.expired)}"
+    assert m.value("preempted_total") == engine.preemption_count, \
+        f"preempted_total {m.value('preempted_total')} != " \
+        f"{engine.preemption_count}"
 
 
 # --- scenarios -------------------------------------------------------------
@@ -140,6 +165,7 @@ def scenario_malformed(rng, smoke):
         engine.submit(r)
     engine.run()
     _check_parity(params, cfg, clean)
+    _metrics_match_ledgers(engine)
     return f"{len(hostile)} hostile tensors rejected, engine healthy"
 
 
@@ -181,6 +207,7 @@ def scenario_random_preempt(rng, smoke):
         assert [r.uid for r in done] == [r.uid for r in reqs], \
             "results not in submission order"
         _check_parity(params, cfg, reqs, noise=noise)
+        _metrics_match_ledgers(engine)
         summary.append(engine.preemption_count)
     return f"preemptions per case: {summary}, all bitwise-exact"
 
@@ -230,6 +257,8 @@ def scenario_hog_shorts(rng, smoke):
     assert eng_on.preemption_count >= 1, "hog trace triggered no preemption"
     assert eng_off.preemption_count == 0
     _check_parity(params, cfg, hogs_on + shorts_on)
+    _metrics_match_ledgers(eng_on)
+    _metrics_match_ledgers(eng_off)
     # fairness SLO: preemption must not make the shorts *worse* (generous
     # 1.5x guard band: interpret-mode timings jitter, the structural gap
     # in this trace is ~2-3x the other way)
@@ -286,7 +315,13 @@ def main(argv=None) -> int:
                     help="reduced trace sizes for CI (~1 min)")
     ap.add_argument("--scenario", choices=sorted(SCENARIOS), default=None,
                     help="run one scenario instead of all")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Perfetto trace of the whole chaos run")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        from repro.obs import trace as obs_trace
+        obs_trace.set_tracer(obs_trace.Tracer(enabled=True))
 
     import numpy as np
     names = [args.scenario] if args.scenario else list(SCENARIOS)
@@ -305,6 +340,10 @@ def main(argv=None) -> int:
             detail, status, failures = str(e), "FAIL", failures + 1
         dt = time.perf_counter() - t0
         print(f"[chaos] {name:16s} {status:4s} ({dt:5.1f}s)  {detail}")
+    if args.trace_out:
+        from repro.obs import trace as obs_trace
+        n = obs_trace.get_tracer().export(args.trace_out)
+        print(f"[chaos] wrote {n} spans to {args.trace_out}")
     if failures:
         print(f"[chaos] {failures} scenario(s) violated serving invariants")
         return 1

@@ -62,7 +62,14 @@ def main(argv=None) -> int:
                     help="CI smoke: one tiny cell, 2 timed iters, then "
                          "assert the written cache round-trips to a lookup "
                          "hit that plan_tiles consumes")
+    ap.add_argument("--trace-out", default=None, metavar="PATH",
+                    help="export a Perfetto trace of the tuning run (one "
+                         "span per candidate measurement)")
     args = ap.parse_args(argv)
+
+    if args.trace_out:
+        from repro.obs import trace as obs_trace
+        obs_trace.set_tracer(obs_trace.Tracer(enabled=True))
 
     from repro.tune import autotune, cache
 
@@ -86,6 +93,7 @@ def main(argv=None) -> int:
             f"smoke: plan_tiles {plan[:3]} != cached {tuple(hit)}"
         print(f"tune-smoke OK: {len(entries)} entries, round-trip hit "
               f"{tuple(hit)} @ {path}")
+        _export_trace(args.trace_out)
         return 0
 
     if args.cell:
@@ -97,7 +105,16 @@ def main(argv=None) -> int:
                   blend_weight=args.blend_weight, iters=args.iters,
                   patience=args.patience, path=args.out,
                   merge=not args.no_merge)
+    _export_trace(args.trace_out)
     return 0
+
+
+def _export_trace(path: str | None) -> None:
+    if not path:
+        return
+    from repro.obs import trace as obs_trace
+    n = obs_trace.get_tracer().export(path)
+    print(f"wrote {n} spans to {path}")
 
 
 if __name__ == "__main__":
